@@ -1,0 +1,24 @@
+"""Fig. 5: simulated wall-clock time to reach target accuracy, using the
+paper's testbed cost model (Jetson-class clients, Wi-Fi links; Section V-C)
+driven by actual tensor sizes.  Paper claim: split methods win once model
+size outweighs feature traffic."""
+from __future__ import annotations
+
+from benchmarks.common import METHODS, run_method
+
+
+def run(quick: bool = False, log=print) -> list[dict]:
+    rounds = 10 if quick else 16
+    targets = [0.5, 0.65]
+    rows = []
+    for method in METHODS:
+        res = run_method(method, rounds=rounds, log=None)
+        for t in targets:
+            secs, byts = res.cost_to_acc(t)
+            rows.append({"benchmark": "fig5_time", "method": method,
+                         "target_acc": t,
+                         "sim_minutes": None if secs is None
+                         else round(secs / 60, 2)})
+            log(f"[fig5] {method} to {t:.0%}: "
+                f"{'never' if secs is None else f'{secs/60:.1f} min (sim)'}")
+    return rows

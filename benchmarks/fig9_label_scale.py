@@ -1,0 +1,20 @@
+"""Fig. 9: impact of labeled-set size (paper: SemiSFL degrades gracefully
+as labels shrink; FedSwitch-SL collapses below ~500 labels)."""
+from __future__ import annotations
+
+from benchmarks.common import run_method
+
+
+def run(quick: bool = False, log=print) -> list[dict]:
+    rounds = 10 if quick else 16
+    sizes = [50, 200] if quick else [50, 150, 400]
+    rows = []
+    for n in sizes:
+        for method in ("fedswitch-sl", "semisfl"):
+            res = run_method(method, rounds=rounds,
+                             rig_kw={"n_labeled": n}, log=None)
+            rows.append({"benchmark": "fig9_labels", "method": method,
+                         "n_labeled": n,
+                         "final_acc": round(res.final_acc, 4)})
+            log(f"[fig9] labels={n} {method}: acc={res.final_acc:.3f}")
+    return rows

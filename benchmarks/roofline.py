@@ -1,0 +1,56 @@
+"""Roofline report: reads the dry-run artifacts (reports/dryrun/*.json)
+and prints the per-(arch x shape x mesh) three-term roofline table
+(EXPERIMENTS.md §Roofline). No JAX work — pure aggregation."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADERS = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "dominant", "hlo_flops/dev", "useful_ratio", "compile_s"]
+
+
+def load_records(path: str = "reports/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(quick: bool = False, log=print) -> list[dict]:
+    rows = []
+    ok = skip = fail = 0
+    for r in load_records():
+        if r.get("ok"):
+            ok += 1
+            rl = r["roofline"]
+            rows.append({
+                "benchmark": "roofline", "arch": r["arch"],
+                "shape": r["shape"], "mesh": r["mesh"],
+                "compute_s": round(rl["compute_s"], 4),
+                "memory_s": round(rl["memory_s"], 4),
+                "collective_s": round(rl["collective_s"], 4),
+                "dominant": rl["dominant"],
+                "hlo_flops_per_dev": f"{r['per_device']['hlo_flops']:.3e}",
+                "useful_ratio": round(r["useful_compute_ratio"], 3),
+                "compile_s": r["compile_s"],
+            })
+        elif "skipped" in r:
+            skip += 1
+            rows.append({"benchmark": "roofline", "arch": r["arch"],
+                         "shape": r["shape"], "mesh": r["mesh"],
+                         "dominant": "SKIP(documented)"})
+        else:
+            fail += 1
+            rows.append({"benchmark": "roofline", "arch": r["arch"],
+                         "shape": r["shape"], "mesh": r["mesh"],
+                         "dominant": "FAIL"})
+    log(f"[roofline] {ok} ok / {skip} skipped / {fail} failed dry-run pairs")
+    for row in rows:
+        if row["dominant"] not in ("FAIL",) and "compute_s" in row:
+            log(f"  {row['arch']:22s} {row['shape']:12s} {row['mesh']:6s} "
+                f"c/m/x={row['compute_s']:.3f}/{row['memory_s']:.3f}/"
+                f"{row['collective_s']:.3f}s dom={row['dominant']}")
+    return rows

@@ -1,0 +1,71 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure plus the
+roofline report.  Prints ``name,us_per_call,derived`` CSV per the repo
+convention (us_per_call = wall-microseconds per training round or per
+record; derived = the benchmark's headline metric).
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick
+  PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import (fig5_time_cost, fig6_comm_cost, fig9_label_scale,
+                        fig11_adaptation, roofline, table2_accuracy,
+                        table3_noniid, table4_dirichlet, table5_projhead,
+                        table6_alphabeta)
+
+SUITES = {
+    "table2": table2_accuracy,
+    "table3": table3_noniid,
+    "table4": table4_dirichlet,
+    "fig5": fig5_time_cost,
+    "fig6": fig6_comm_cost,
+    "fig9": fig9_label_scale,
+    "fig11": fig11_adaptation,
+    "table5": table5_projhead,
+    "table6": table6_alphabeta,
+    "roofline": roofline,
+}
+
+
+def _derived(rows: list[dict]) -> str:
+    for key in ("final_acc", "sim_minutes", "sim_GB", "useful_ratio",
+                "per_round_GB"):
+        vals = [r[key] for r in rows if r.get(key) is not None]
+        if vals:
+            return f"{key}={vals[-1]}"
+    return "n/a"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="reports/bench")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+
+    os.makedirs(args.out, exist_ok=True)
+    print("name,us_per_call,derived")
+    all_rows = []
+    for name in names:
+        mod = SUITES[name]
+        t0 = time.time()
+        rows = mod.run(quick=args.quick, log=lambda *a: print("#", *a))
+        dt = time.time() - t0
+        us = dt * 1e6 / max(len(rows), 1)
+        print(f"{name},{us:.0f},{_derived(rows)}", flush=True)
+        all_rows.extend(rows)
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=2)
+    with open(os.path.join(args.out, "all.json"), "w") as f:
+        json.dump(all_rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

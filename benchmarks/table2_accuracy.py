@@ -1,0 +1,18 @@
+"""Table II: overall test accuracy, SemiSFL vs the five baselines (IID
+clients).  Paper claim reproduced: SemiSFL > FedSwitch(-SL)/SemiFL/FedMatch
+> Supervised-only."""
+from __future__ import annotations
+
+from benchmarks.common import METHODS, run_method
+
+
+def run(quick: bool = False, log=print) -> list[dict]:
+    rounds = 10 if quick else 22
+    rows = []
+    for method in METHODS:
+        res = run_method(method, rounds=rounds, log=log)
+        rows.append({"benchmark": "table2", "method": method,
+                     "final_acc": round(res.final_acc, 4),
+                     "wall_s": round(res.wall_s, 1)})
+        log(f"[table2] {method}: acc={res.final_acc:.3f}")
+    return rows

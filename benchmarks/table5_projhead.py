@@ -1,0 +1,18 @@
+"""Table V: projection-head ablation (none / linear / MLP) under non-IID —
+paper: MLP best, none worst."""
+from __future__ import annotations
+
+from benchmarks.common import run_method
+
+
+def run(quick: bool = False, log=print) -> list[dict]:
+    rounds = 10 if quick else 16
+    rows = []
+    for head in ("none", "linear", "mlp"):
+        res = run_method("semisfl", rounds=rounds,
+                         rig_kw={"dirichlet": 0.5,
+                                 "overrides": {"proj_head": head}}, log=None)
+        rows.append({"benchmark": "table5_projhead", "method": head,
+                     "final_acc": round(res.final_acc, 4)})
+        log(f"[table5] proj_head={head}: acc={res.final_acc:.3f}")
+    return rows

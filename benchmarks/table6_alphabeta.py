@@ -1,0 +1,21 @@
+"""Table VI: adaptation hyperparameters (alpha, beta) grid — paper: no
+single winner, alpha=1.5/beta=8 reliably good."""
+from __future__ import annotations
+
+from benchmarks.common import run_method
+
+
+def run(quick: bool = False, log=print) -> list[dict]:
+    rounds = 10 if quick else 14
+    grid = [(1.5, 8.0)] if quick else [(1.5, 4.0), (1.5, 8.0),
+                                       (2.0, 4.0), (2.0, 8.0)]
+    rows = []
+    for alpha, beta in grid:
+        res = run_method("semisfl", rounds=rounds,
+                         rig_kw={"n_labeled": 80, "k_s": 20,
+                                 "overrides": {"alpha": alpha,
+                                               "beta": beta}}, log=None)
+        rows.append({"benchmark": "table6", "alpha": alpha, "beta": beta,
+                     "final_acc": round(res.final_acc, 4)})
+        log(f"[table6] alpha={alpha} beta={beta}: acc={res.final_acc:.3f}")
+    return rows

@@ -1,0 +1,45 @@
+"""Quickstart: the SemiSFL public API in ~60 lines.
+
+Trains the paper's customized CNN with clustering regularization on the
+synthetic semi-supervised rig for a handful of rounds and prints the
+accuracy trajectory.  Runs in ~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import SemiSFLSystem, make_controller
+from repro.data import (Loader, client_loaders, make_image_dataset,
+                        train_test_split, uniform_partition)
+
+# --- data: 100 labeled samples on the PS, the rest unlabeled on 8 clients
+cfg = smoke_config("paper-cnn")
+cfg = replace(cfg, semisfl=replace(cfg.semisfl, k_s_init=15, k_u=4,
+                                   queue_len=512))
+ds = make_image_dataset(seed=0, num_classes=10, n=1500,
+                        image_size=cfg.image_size)
+train, test = train_test_split(ds, n_test=300)
+labeled = Loader(train, np.arange(100), batch=32, seed=0)
+unlabeled_idx = np.arange(100, len(train.y))
+parts = [unlabeled_idx[p]
+         for p in uniform_partition(0, len(unlabeled_idx), 8)]
+clients = client_loaders(train, parts, batch=16, seed=1)
+
+# --- system: Alg. 1 with clustering regularization + K_s adaptation
+system = SemiSFLSystem(cfg, n_clients_per_round=4)
+state = system.init_state(seed=0)
+controller = make_controller(cfg, n_labeled=100, n_total=len(train.y))
+
+for r in range(12):
+    state, metrics = system.run_round(state, labeled, clients, controller)
+    if r % 3 == 0 or r == 11:
+        acc = system.evaluate(state, test.x, test.y)  # teacher model (§V-B)
+        print(f"round {r:2d}: f_s={metrics.f_s:.3f} f_u={metrics.f_u:.3f} "
+              f"mask={metrics.mask_rate:.2f} K_s={metrics.k_s} "
+              f"teacher_acc={acc:.3f}")
+
+print("final teacher accuracy:",
+      round(system.evaluate(state, test.x, test.y), 3))

@@ -1,0 +1,37 @@
+"""End-to-end training driver: several hundred SemiSFL steps on CPU.
+
+Runs 40 aggregation rounds (40 x (K_s + K_u) > 400 optimizer steps) of the
+full system — supervised phase with supervised-contrastive loss, teacher
+EMA + memory queue, cross-entity phase with consistency + clustering
+regularization, bottom FedAvg, K_s adaptation — then compares against the
+Supervised-only lower bound, and saves a checkpoint.
+
+  PYTHONPATH=src python examples/train_semisfl.py [--rounds 40]
+"""
+import argparse
+
+from repro.launch.train import run_training
+from repro.checkpoint import save_state
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=40)
+ap.add_argument("--dirichlet", type=float, default=0.1)
+args = ap.parse_args()
+
+print(f"=== SemiSFL, Dir({args.dirichlet}) non-IID, {args.rounds} rounds ===")
+state, hist, system = run_training(
+    arch="paper-cnn", baseline="semisfl", rounds=args.rounds,
+    n_labeled=150, n_total=2400, n_clients=10, n_active=5,
+    dirichlet=args.dirichlet, eval_every=5)
+
+print("\n=== Supervised-only lower bound (same labels) ===")
+_, hist_sup, _ = run_training(
+    arch="paper-cnn", baseline="supervised-only", rounds=args.rounds,
+    n_labeled=150, n_total=2400, dirichlet=args.dirichlet, eval_every=10)
+
+acc = [h["test_acc"] for h in hist if "test_acc" in h][-1]
+acc_sup = [h["test_acc"] for h in hist_sup if "test_acc" in h][-1]
+print(f"\nSemiSFL {acc:.3f} vs Supervised-only {acc_sup:.3f} "
+      f"(+{(acc - acc_sup) * 100:.1f} pts from unlabeled clients)")
+save_state("reports/example_ckpt", state.params, {"rounds": args.rounds})
+print("checkpoint -> reports/example_ckpt.npz")

@@ -1,0 +1,103 @@
+"""Render the §Dry-run and §Roofline markdown tables from
+reports/dryrun/*.json (EXPERIMENTS.md consumes the output).
+
+  PYTHONPATH=src python scripts/make_tables.py > reports/roofline_tables.md
+"""
+import glob
+import json
+import os
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = ["qwen2.5-14b", "qwen2-vl-7b", "stablelm-1.6b", "zamba2-7b",
+               "seamless-m4t-medium", "qwen3-14b", "arctic-480b",
+               "xlstm-1.3b", "h2o-danube-1.8b", "deepseek-v2-236b"]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    if b >= 1e12:
+        return f"{b/1e12:.1f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b:.0f}"
+
+
+def load():
+    recs = {}
+    for f in glob.glob("reports/dryrun/*.json"):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def main():
+    recs = load()
+    print("### Dry-run matrix (lower + compile status)\n")
+    print("| arch | " + " | ".join(
+        f"{s} (1-pod / 2-pod)" for s in ORDER_SHAPES) + " |")
+    print("|---|" + "---|" * len(ORDER_SHAPES))
+    for a in ORDER_ARCHS:
+        cells = []
+        for s in ORDER_SHAPES:
+            pair = []
+            for m in ("single", "multi"):
+                r = recs.get((a, s, m))
+                if r is None:
+                    pair.append("?")
+                elif r.get("ok"):
+                    pair.append(f"OK({r['compile_s']:.0f}s)")
+                elif "skipped" in r:
+                    pair.append("skip")
+                else:
+                    pair.append("FAIL")
+            cells.append(" / ".join(pair))
+        print(f"| {a} | " + " | ".join(cells) + " |")
+
+    print("\n### Roofline terms (single-pod, per device, TPU v5e)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant |"
+          " HLO FLOPs/dev | MODEL/HLO | coll bytes (ag/ar/rs/a2a) |"
+          " temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            r = recs.get((a, s, "single"))
+            if r is None:
+                continue
+            if not r.get("ok"):
+                if "skipped" in r:
+                    print(f"| {a} | {s} | - | - | - | skipped"
+                          f" (sub-quadratic rule) | - | - | - | - |")
+                continue
+            rl = r["roofline"]
+            pd = r["per_device"]
+            cb = pd["collective"]["bytes"]
+            coll = "/".join(fmt_bytes(cb.get(k, 0)) for k in
+                            ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all"))
+            print(f"| {a} | {s} | {rl['compute_s']:.3f} | "
+                  f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+                  f"**{rl['dominant']}** | {pd['hlo_flops']:.2e} | "
+                  f"{r['useful_compute_ratio']:.3f} | {coll} | "
+                  f"{pd['memory']['temp_bytes']/1e9:.1f} |")
+
+    print("\n### Multi-pod deltas (2x16x16 vs 16x16; same arch x shape)\n")
+    print("| arch | shape | flops/dev ratio | collective/dev ratio |")
+    print("|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            r1 = recs.get((a, s, "single"))
+            r2 = recs.get((a, s, "multi"))
+            if not (r1 and r2 and r1.get("ok") and r2.get("ok")):
+                continue
+            f1 = r1["per_device"]["hlo_flops"]
+            f2 = r2["per_device"]["hlo_flops"]
+            c1 = r1["per_device"]["collective"]["total_bytes"] or 1
+            c2 = r2["per_device"]["collective"]["total_bytes"] or 1
+            print(f"| {a} | {s} | {f2/max(f1,1):.2f} | {c2/c1:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

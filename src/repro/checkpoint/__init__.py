@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load_pytree, restore_state, save_pytree, save_state
+
+__all__ = ["load_pytree", "restore_state", "save_pytree", "save_state"]

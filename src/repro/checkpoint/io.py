@@ -1,0 +1,60 @@
+"""Pure-numpy checkpointing: pytrees -> .npz keyed by tree path, plus a JSON
+sidecar for python-side round state (K_s controller, round index, rng seed).
+
+No orbax dependency; restore requires a template pytree with the same
+structure (standard for functional JAX codebases)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, tmpl in flat:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if arr.shape != tmpl.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {tmpl.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [leaf for leaf in leaves])
+
+
+def save_state(path: str, tree: Any, meta: dict) -> None:
+    save_pytree(path + ".npz", tree)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def restore_state(path: str, template: Any) -> tuple[Any, dict]:
+    tree = load_pytree(path + ".npz", template)
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    return tree, meta

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    PAPER_ARCHS,
+    ArchConfig,
+    InputShape,
+    MoEConfig,
+    SemiSFLConfig,
+    SSMConfig,
+    XLSTMConfig,
+    get_config,
+    list_archs,
+    register,
+    smoke_config,
+)
+
+__all__ = [
+    "ASSIGNED_ARCHS", "INPUT_SHAPES", "PAPER_ARCHS", "ArchConfig",
+    "InputShape", "MoEConfig", "SemiSFLConfig", "SSMConfig", "XLSTMConfig",
+    "get_config", "list_archs", "register", "smoke_config",
+]

@@ -1,0 +1,26 @@
+"""Snowflake Arctic 480B — dense-MoE hybrid: 128 experts top-2 with a dense
+residual MLP in parallel. [hf:Snowflake/snowflake-arctic-base]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+ARCTIC_480B = register(ArchConfig(
+    name="arctic-480b",
+    arch_type="moe",
+    source="hf:Snowflake/snowflake-arctic-base",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,  # dense residual branch width
+    vocab_size=32000,
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=2,
+        d_ff_expert=4864,
+        d_ff_dense_residual=4864,
+        first_moe_layer=0,
+        period=1,
+        capacity_factor=1.25,
+    ),
+    rope_theta=10_000.0,
+))

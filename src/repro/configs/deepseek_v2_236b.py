@@ -1,0 +1,31 @@
+"""DeepSeek-V2 236B — MLA (kv_lora=512) + MoE 160 routed top-6, 2 shared
+experts, first layer dense. [arXiv:2405.04434]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+DEEPSEEK_V2_236B = register(ArchConfig(
+    name="deepseek-v2-236b",
+    arch_type="moe",
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,  # MLA is effectively MHA over the decompressed latent
+    d_ff=12288,        # dense MLP width (layer 0)
+    vocab_size=102400,
+    use_mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    moe=MoEConfig(
+        num_experts=160,
+        top_k=6,
+        d_ff_expert=1536,
+        num_shared_experts=2,
+        first_moe_layer=1,  # layer 0 keeps the dense MLP
+        period=1,
+        capacity_factor=1.25,
+    ),
+    rope_theta=10_000.0,
+))

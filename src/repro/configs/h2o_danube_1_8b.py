@@ -1,0 +1,17 @@
+"""H2O-Danube-1.8B — llama+mistral mix with sliding-window attention. [arXiv:2401.16818]"""
+from repro.configs.base import ArchConfig, register
+
+H2O_DANUBE_1_8B = register(ArchConfig(
+    name="h2o-danube-1.8b",
+    arch_type="dense",
+    source="arXiv:2401.16818 (H2O-Danube)",
+    num_layers=24,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=32000,
+    sliding_window=4096,
+    rope_theta=10_000.0,
+))

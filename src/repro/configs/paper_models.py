@@ -1,0 +1,52 @@
+"""The paper's own benchmark models (Section V-A), as CNN configs.
+
+These are the models SemiSFL was evaluated on; they drive the paper-table
+benchmarks.  Image sizes / layer counts follow Section V-A; the customized
+CNN is the 2-conv + FC(512) + softmax model used on SVHN.
+Split layers (Section V-C): CNN@2, AlexNet@5, VGG13@10, VGG16@13 — expressed
+here as conv-stage indices in our composable CNN builder.
+"""
+from dataclasses import replace
+
+from repro.configs.base import ArchConfig, SemiSFLConfig, register
+
+
+def _cnn(name, channels, fc, image_size, split, num_classes=10):
+    return register(ArchConfig(
+        name=name,
+        arch_type="cnn",
+        source="SemiSFL paper §V-A",
+        num_layers=len(channels),
+        d_model=fc[-1] if fc else channels[-1],
+        num_heads=1,
+        num_kv_heads=1,
+        d_ff=0,
+        vocab_size=0,
+        cnn_channels=channels,
+        cnn_fc=fc,
+        image_size=image_size,
+        num_classes=num_classes,
+        modality="image",
+        semisfl=SemiSFLConfig(split_layer=split, proj_dim=64, proj_hidden=128,
+                              queue_len=2048),
+        dtype="float32",
+    ))
+
+
+# (i) customized CNN on SVHN: two 5x5 convs, FC 512, softmax 10
+PAPER_CNN = _cnn("paper-cnn", channels=(32, 64), fc=(512,), image_size=32, split=2)
+
+# (ii) AlexNet on CIFAR-10 (127 MB)
+PAPER_ALEXNET = _cnn("paper-alexnet", channels=(64, 192, 384, 256, 256),
+                     fc=(4096, 4096), image_size=32, split=5)
+
+# (iii) VGG13 on STL-10 (508 MB)
+PAPER_VGG13 = _cnn("paper-vgg13",
+                   channels=(64, 64, 128, 128, 256, 256, 512, 512, 512, 512),
+                   fc=(4096, 4096), image_size=96, split=10)
+
+# (iv) VGG16 on IMAGE-100 (528 MB, 0.13B params)
+PAPER_VGG16 = _cnn("paper-vgg16",
+                   channels=(64, 64, 128, 128, 256, 256, 256, 512, 512, 512,
+                             512, 512, 512),
+                   fc=(4096, 4096), image_size=144, split=13, num_classes=100)

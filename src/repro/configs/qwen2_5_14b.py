@@ -1,0 +1,20 @@
+"""Qwen2.5-14B — dense GQA decoder with QKV bias. [hf:Qwen/Qwen2.5-0.5B]"""
+from repro.configs.base import ArchConfig, register
+
+QWEN2_5_14B = register(ArchConfig(
+    name="qwen2.5-14b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen2.5-0.5B (family card); assignment pool",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=13824,
+    vocab_size=152064,
+    attn_bias=True,
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    act="silu",
+    mlp_gated=True,
+))

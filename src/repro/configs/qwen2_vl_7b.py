@@ -1,0 +1,28 @@
+"""Qwen2-VL-7B language backbone — M-RoPE, dynamic resolution. [arXiv:2409.12191]
+
+The vision encoder (ViT + merger) is a stub per the assignment carve-out:
+``input_specs`` provides pre-computed patch embeddings of shape
+(batch, frontend_tokens, d_model); the backbone interleaves them with text
+token embeddings and applies M-RoPE over (temporal, height, width) position
+ids supplied as input.
+"""
+from repro.configs.base import ArchConfig, register
+
+QWEN2_VL_7B = register(ArchConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    source="arXiv:2409.12191 (Qwen2-VL)",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    attn_bias=True,
+    rope_kind="mrope",
+    mrope_sections=(16, 24, 24),  # sums to head_dim/2 = 64
+    rope_theta=1_000_000.0,
+    modality="vision",
+    frontend_tokens=1024,  # patch embeddings per sample in train_4k
+))

@@ -1,0 +1,18 @@
+"""Qwen3-14B — dense GQA decoder with per-head qk RMSNorm. [hf:Qwen/Qwen3-8B]"""
+from repro.configs.base import ArchConfig, register
+
+QWEN3_14B = register(ArchConfig(
+    name="qwen3-14b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen3-8B (family card); assignment pool",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    vocab_size=151936,
+    qk_norm=True,
+    attn_bias=False,
+    rope_theta=1_000_000.0,
+))

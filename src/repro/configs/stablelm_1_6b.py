@@ -1,0 +1,20 @@
+"""StableLM-2-1.6B — dense MHA, partial rotary, LayerNorm. [hf:stabilityai/stablelm-2-1_6b]"""
+from repro.configs.base import ArchConfig, register
+
+STABLELM_1_6B = register(ArchConfig(
+    name="stablelm-1.6b",
+    arch_type="dense",
+    source="hf:stabilityai/stablelm-2-1_6b",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100352,
+    rope_theta=10_000.0,
+    rope_pct=0.25,
+    norm="layernorm",
+    act="silu",
+    mlp_gated=True,
+))

@@ -1,0 +1,25 @@
+"""xLSTM-1.3B — sLSTM + mLSTM block stack (xLSTM[7:1]). [arXiv:2405.04517]
+
+48 blocks, one sLSTM block every 8 (the rest mLSTM).  d_ff=0: blocks carry
+their own up-projections (mLSTM proj factor 2, sLSTM ffn factor 4/3).
+"""
+from repro.configs.base import ArchConfig, XLSTMConfig, register
+
+XLSTM_1_3B = register(ArchConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    source="arXiv:2405.04517 (xLSTM)",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    block_kind="xlstm",
+    xlstm=XLSTMConfig(slstm_period=8, mlstm_proj_factor=2.0,
+                      slstm_ff_factor=4.0 / 3.0, mlstm_head_dim=512),
+    rope_kind="none",
+    norm="layernorm",
+    act="gelu",
+))

@@ -1,0 +1,25 @@
+"""Zamba2-7B — hybrid Mamba2 stack + weight-shared attention blocks. [arXiv:2411.15242]
+
+81 Mamba2 layers; one *shared* (single set of weights) attention+MLP block is
+applied after every 6 Mamba2 layers.  ssm_state=64.  For long_500k serving the
+shared attention block uses a 4096 sliding window (DESIGN.md §5 adaptation).
+"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+ZAMBA2_7B = register(ArchConfig(
+    name="zamba2-7b",
+    arch_type="hybrid",
+    source="arXiv:2411.15242 (Zamba2)",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    block_kind="mamba2",
+    shared_attn_period=6,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk_size=256),
+    long_context_window=4096,
+    rope_theta=10_000.0,
+))

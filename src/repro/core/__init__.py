@@ -1,0 +1,7 @@
+from repro.core.adaptation import FreqController
+from repro.core.engine import (RoundMetrics, SemiSFLState, SemiSFLSystem,
+                               make_controller)
+from repro.core.queue import FeatureQueue, enqueue, init_queue
+
+__all__ = ["FreqController", "RoundMetrics", "SemiSFLState", "SemiSFLSystem",
+           "make_controller", "FeatureQueue", "enqueue", "init_queue"]

@@ -1,0 +1,395 @@
+"""The paper's comparison baselines (Section V-B), implemented in full on
+the same substrate:
+
+  * Supervised-only — labeled-data-only training on the PS (lower bound).
+  * SemiFL (Diao et al., NeurIPS'22) — alternate training; clients pseudo-
+    label with the latest global model and train full local replicas on
+    strongly-augmented data with a Mixup-augmented loss; full-model FedAvg.
+  * FedMatch (Jeong et al., ICLR'21) — disjoint decomposition w = sigma +
+    psi (sigma: supervised on the PS, psi: unsupervised on clients) plus
+    inter-client consistency against helper models' predictions.
+  * FedSwitch (Zhao et al., 2023) — EMA teacher for pseudo-labeling with
+    adaptive teacher/student switching (we switch on relative confidence,
+    replacing the paper's external IIDness hyperparameter).
+  * FedSwitch-SL — FedSwitch + split learning: identical machinery to
+    SemiSFL with clustering regularization and the supervised-contrastive
+    term disabled; the paper's key ablation.
+
+All baselines share SemiSFL's loaders/augmentations/EMA/eval so the
+comparison isolates algorithmic differences, like the paper's testbed did.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import losses
+from repro.core.ema import ema_update
+from repro.core.engine import SemiSFLSystem
+from repro.data.augment import strong_augment, weak_augment
+from repro.data.pipeline import Loader, stack_client_batches
+from repro.models import build_model
+from repro.optim import apply_updates, sgd
+
+Array = jax.Array
+
+
+class FLState(NamedTuple):
+    params: Any
+    teacher: Any
+    opt: Any
+    rng: Array
+    round: Array
+
+
+def _full_forward(model, params, x):
+    feats, _, extras = model.bottom_apply(params["bottom"], {"images": x})
+    out, _ = model.top_apply(params["top"], feats, extras=extras)
+    return out["logits"]
+
+
+class FLBase:
+    """Shared full-model FL machinery (broadcast / local train / FedAvg)."""
+
+    name = "fl-base"
+
+    def __init__(self, cfg: ArchConfig, *, n_clients_per_round: int = 10,
+                 lr: float = 0.02, momentum: float = 0.9,
+                 local_steps: int = 5,
+                 lr_schedule: Optional[Callable] = None):
+        self.cfg = cfg
+        self.s = cfg.semisfl
+        self.model = build_model(cfg)
+        self.n_active = n_clients_per_round
+        self.local_steps = local_steps
+        self.opt = sgd(momentum=momentum)
+        self.lr_schedule = lr_schedule or (lambda step: jnp.float32(lr))
+        self._build()
+
+    def init_state(self, seed: int = 0) -> FLState:
+        rng = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(rng)
+        params = self.model.init(k1)
+        return FLState(params=params,
+                       teacher=jax.tree.map(jnp.copy, params),
+                       opt=self.opt.init(params), rng=k2,
+                       round=jnp.zeros((), jnp.int32))
+
+    # -- steps ---------------------------------------------------------
+    def _build(self):
+        model, s = self.model, self.s
+
+        def supervised_step(state: FLState, x, y, step_idx):
+            rng, k = jax.random.split(state.rng)
+            xs = strong_augment(k, x)
+            lr = self.lr_schedule(step_idx)
+
+            def lf(p):
+                return losses.cross_entropy(_full_forward(model, p, xs), y)
+
+            loss, grads = jax.value_and_grad(lf)(state.params)
+            upd, opt = self.opt.update(grads, state.opt, state.params, lr)
+            params = apply_updates(state.params, upd)
+            teacher = ema_update(state.teacher, params, s.ema_decay)
+            return FLState(params, teacher, opt, rng, state.round), loss
+
+        self.supervised_step = jax.jit(supervised_step)
+
+        def eval_batch(params, x, y):
+            logits = _full_forward(model, params, x)
+            return (logits.argmax(-1) == y).astype(jnp.float32).sum()
+
+        self.eval_batch = jax.jit(eval_batch)
+        self._build_local()
+
+    # subclasses override: one local unsupervised step on stacked clients
+    def _build_local(self):
+        raise NotImplementedError
+
+    # -- round driver ----------------------------------------------------
+    def run_round(self, state: FLState, labeled: Loader,
+                  client_loaders_: list[Loader], controller,
+                  rng_np: Optional[np.random.RandomState] = None):
+        rng_np = rng_np or np.random.RandomState(int(state.round))
+        k_s = controller.k_s if controller is not None else self.s.k_s_init
+        step0 = int(state.round) * (self.s.k_s_init + self.s.k_u)
+        f_s = []
+        for k in range(k_s):
+            x, y = labeled.next()
+            state, loss = self.supervised_step(state, jnp.asarray(x),
+                                               jnp.asarray(y), step0 + k)
+            f_s.append(float(loss))
+
+        active = list(rng_np.choice(len(client_loaders_),
+                                    size=min(self.n_active,
+                                             len(client_loaders_)),
+                                    replace=False))
+        stack = lambda t: jnp.broadcast_to(t, (len(active),) + t.shape).copy()
+        client_params = jax.tree.map(stack, state.params)
+        rng = state.rng
+        f_u = []
+        for k in range(self.s.k_u):
+            xu, _ = stack_client_batches(client_loaders_, active)
+            client_params, rng, loss = self.local_step(
+                client_params, state.teacher, state.params, jnp.asarray(xu),
+                rng, step0 + k_s + k)
+            f_u.append(float(loss))
+        params = jax.tree.map(lambda t: t.mean(axis=0), client_params)
+        teacher = ema_update(state.teacher, params, self.s.ema_decay)
+        state = FLState(params, teacher, state.opt, rng, state.round + 1)
+        fs = float(np.mean(f_s)) if f_s else 0.0
+        fu = float(np.mean(f_u)) if f_u else 0.0
+        if controller is not None:
+            controller.update(fs, fu)
+        return state, {"f_s": fs, "f_u": fu}
+
+    def evaluate(self, state: FLState, test_x, test_y, batch: int = 256,
+                 use_teacher: bool = True) -> float:
+        params = state.teacher if use_teacher else state.params
+        correct = 0.0
+        for i in range(0, len(test_y), batch):
+            correct += float(self.eval_batch(
+                params, jnp.asarray(test_x[i: i + batch]),
+                jnp.asarray(test_y[i: i + batch])))
+        return correct / len(test_y)
+
+
+# ---------------------------------------------------------------------------
+
+
+class SupervisedOnly(FLBase):
+    name = "supervised-only"
+
+    def _build_local(self):
+        def local_step(client_params, teacher, global_params, xu, rng, step):
+            return client_params, rng, jnp.zeros(())
+        self.local_step = jax.jit(local_step)
+
+    def run_round(self, state, labeled, client_loaders_, controller,
+                  rng_np=None):
+        # clients are not involved (Section V-D1)
+        k_s = controller.k_s if controller is not None else self.s.k_s_init
+        step0 = int(state.round) * self.s.k_s_init
+        f_s = []
+        for k in range(k_s):
+            x, y = labeled.next()
+            state, loss = self.supervised_step(state, jnp.asarray(x),
+                                               jnp.asarray(y), step0 + k)
+            f_s.append(float(loss))
+        state = FLState(state.params, state.teacher, state.opt, state.rng,
+                        state.round + 1)
+        fs = float(np.mean(f_s)) if f_s else 0.0
+        if controller is not None:
+            controller.update(fs, fs)
+        return state, {"f_s": fs, "f_u": 0.0}
+
+
+class SemiFL(FLBase):
+    """Pseudo-labels from the latest *global* model + Mixup 'mix' loss."""
+
+    name = "semifl"
+
+    def _build_local(self):
+        model, s = self.model, self.s
+        lr_schedule = self.lr_schedule
+
+        def local_step(client_params, teacher, global_params, xu, rng, step):
+            n = xu.shape[0]
+            rng, kw, ks_, km, kl = jax.random.split(rng, 5)
+            xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
+            xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
+            lr = lr_schedule(step)
+            # pseudo-label with the up-to-date global model (Diao et al.)
+            t_logits = jax.vmap(
+                lambda x: _full_forward(model, global_params, x))(xw)
+            pseudo, ok, _ = losses.pseudo_labels(t_logits,
+                                                 s.confidence_threshold)
+            # mixup within each client batch
+            lam = jax.random.beta(km, 0.75, 0.75)
+            perm = jax.random.permutation(kl, xs.shape[1])
+            x_mix = lam * xs + (1 - lam) * xs[:, perm]
+
+            def lf(cp):
+                logits = jax.vmap(
+                    lambda p, x: _full_forward(model, p, x))(cp, xs)
+                ce = losses.cross_entropy(logits, pseudo, mask=ok)
+                logits_m = jax.vmap(
+                    lambda p, x: _full_forward(model, p, x))(cp, x_mix)
+                mix = (lam * losses.cross_entropy(logits_m, pseudo, mask=ok)
+                       + (1 - lam) * losses.cross_entropy(
+                           logits_m, pseudo[:, perm], mask=ok[:, perm]))
+                return ce + mix
+
+            loss, grads = jax.value_and_grad(lf)(client_params)
+            grads = jax.tree.map(lambda g: g * n, grads)  # per-client grad
+            new_params = jax.tree.map(lambda p, g: p - lr * g, client_params,
+                                      grads)
+            return new_params, rng, loss
+
+        self.local_step = jax.jit(local_step)
+
+
+class FedSwitch(FLBase):
+    """EMA teacher pseudo-labeling with adaptive teacher/student switch."""
+
+    name = "fedswitch"
+
+    def _build_local(self):
+        model, s = self.model, self.s
+        lr_schedule = self.lr_schedule
+
+        def local_step(client_params, teacher, global_params, xu, rng, step):
+            n = xu.shape[0]
+            rng, kw, ks_ = jax.random.split(rng, 3)
+            xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
+            xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
+            lr = lr_schedule(step)
+            t_logits = jax.vmap(
+                lambda x: _full_forward(model, teacher, x))(xw)
+            s_logits = jax.vmap(
+                lambda p, x: _full_forward(model, p, x))(client_params, xw)
+            # switch: per-client, use whichever labeler is more confident
+            t_conf = jax.nn.softmax(t_logits, -1).max(-1).mean(-1)  # (N,)
+            s_conf = jax.nn.softmax(s_logits, -1).max(-1).mean(-1)
+            use_t = (t_conf >= s_conf)[:, None, None]
+            labeler = jnp.where(use_t, t_logits, s_logits)
+            pseudo, ok, _ = losses.pseudo_labels(labeler,
+                                                 s.confidence_threshold)
+            pseudo = jax.lax.stop_gradient(pseudo)
+            ok = jax.lax.stop_gradient(ok)
+
+            def lf(cp):
+                logits = jax.vmap(
+                    lambda p, x: _full_forward(model, p, x))(cp, xs)
+                return losses.cross_entropy(logits, pseudo, mask=ok)
+
+            loss, grads = jax.value_and_grad(lf)(client_params)
+            grads = jax.tree.map(lambda g: g * n, grads)
+            new_params = jax.tree.map(lambda p, g: p - lr * g, client_params,
+                                      grads)
+            return new_params, rng, loss
+
+        self.local_step = jax.jit(local_step)
+
+
+class FedMatch(FLBase):
+    """Disjoint sigma/psi decomposition + inter-client consistency.
+
+    sigma is trained on labeled data at the PS; psi on unlabeled data at
+    clients; the full model is sigma + psi.  Helpers: each client's ICC
+    reference is the mean prediction of the other clients' models on its
+    weakly-augmented batch (the paper ships helper models to clients; here
+    they live in the same process)."""
+
+    name = "fedmatch"
+
+    def init_state(self, seed: int = 0) -> FLState:
+        state = super().init_state(seed)
+        # params -> {"sigma": ..., "psi": ...}; full = sigma + psi
+        sigma = state.params
+        psi = jax.tree.map(lambda t: jnp.zeros_like(t), sigma)
+        params = {"sigma": sigma, "psi": psi}
+        return FLState(params=params,
+                       teacher=jax.tree.map(jnp.copy, params),
+                       opt=self.opt.init(sigma), rng=state.rng,
+                       round=state.round)
+
+    @staticmethod
+    def _combine(params):
+        return jax.tree.map(lambda a, b: a + b, params["sigma"],
+                            params["psi"])
+
+    def _build(self):
+        model, s = self.model, self.s
+
+        def supervised_step(state: FLState, x, y, step_idx):
+            rng, k = jax.random.split(state.rng)
+            xs = strong_augment(k, x)
+            lr = self.lr_schedule(step_idx)
+            psi = state.params["psi"]
+
+            def lf(sigma):
+                full = jax.tree.map(lambda a, b: a + b, sigma, psi)
+                return losses.cross_entropy(_full_forward(model, full, xs), y)
+
+            loss, grads = jax.value_and_grad(lf)(state.params["sigma"])
+            upd, opt = self.opt.update(grads, state.opt,
+                                       state.params["sigma"], lr)
+            sigma = apply_updates(state.params["sigma"], upd)
+            params = {"sigma": sigma, "psi": psi}
+            teacher = ema_update(state.teacher, params, s.ema_decay)
+            return FLState(params, teacher, opt, rng, state.round), loss
+
+        self.supervised_step = jax.jit(supervised_step)
+
+        def eval_batch(params, x, y):
+            logits = _full_forward(model, self._combine(params), x)
+            return (logits.argmax(-1) == y).astype(jnp.float32).sum()
+
+        self.eval_batch = jax.jit(eval_batch)
+        self._build_local()
+
+    def _build_local(self):
+        model, s = self.model, self.s
+        lr_schedule = self.lr_schedule
+
+        def local_step(client_params, teacher, global_params, xu, rng, step):
+            n = xu.shape[0]
+            rng, kw, ks_ = jax.random.split(rng, 3)
+            xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
+            xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
+            lr = lr_schedule(step)
+            sigma = client_params["sigma"]  # frozen during local training
+
+            def full_of(psi_i, sigma_i):
+                return jax.tree.map(lambda a, b: a + b, sigma_i, psi_i)
+
+            # helper predictions: mean logits of the other clients' models
+            def fwd(psi_i, sigma_i, x):
+                return _full_forward(model, full_of(psi_i, sigma_i), x)
+
+            all_logits = jax.vmap(fwd)(client_params["psi"], sigma, xw)
+            mean_logits = all_logits.mean(axis=0, keepdims=True)
+            helper_logits = (mean_logits * n - all_logits) / jnp.maximum(
+                n - 1, 1)
+            pseudo, ok, _ = losses.pseudo_labels(all_logits,
+                                                 s.confidence_threshold)
+            h_pseudo, h_ok, _ = losses.pseudo_labels(
+                helper_logits, s.confidence_threshold)
+
+            def lf(psi):
+                logits = jax.vmap(fwd)(psi, sigma, xs)
+                ce = losses.cross_entropy(logits, pseudo, mask=ok)
+                icc = losses.cross_entropy(logits, h_pseudo, mask=h_ok)
+                # L1 sparsity on psi (FedMatch regularizer)
+                l1 = sum(jnp.abs(g).mean() for g in jax.tree.leaves(psi))
+                return ce + 0.5 * icc + 1e-4 * l1
+
+            loss, grads = jax.value_and_grad(lf)(client_params["psi"])
+            grads = jax.tree.map(lambda g: g * n, grads)
+            psi = jax.tree.map(lambda p, g: p - lr * g, client_params["psi"],
+                               grads)
+            return {"sigma": sigma, "psi": psi}, rng, loss
+
+        self.local_step = jax.jit(local_step)
+
+
+def make_fedswitch_sl(cfg: ArchConfig, **kw) -> SemiSFLSystem:
+    """FedSwitch-SL = the split pipeline minus clustering regularization
+    minus the supervised-contrastive term (the paper's ablation system)."""
+    sys_ = SemiSFLSystem(cfg, use_clustering=False, use_supcon=False, **kw)
+    sys_.name = "fedswitch-sl"
+    return sys_
+
+
+BASELINES = {
+    "supervised-only": SupervisedOnly,
+    "semifl": SemiFL,
+    "fedswitch": FedSwitch,
+    "fedmatch": FedMatch,
+}

@@ -1,0 +1,115 @@
+"""Communication / wall-clock cost model (Section V-C testbed, Figs. 5-6).
+
+The paper measures time on 80 Jetson clients + an A6000 server over Wi-Fi
+(0.8-8 Mbps up, 10-20 Mbps down).  We reproduce the *accounting*: per-round
+bytes from actual parameter/feature tensor sizes, per-round seconds from a
+link model with the paper's bandwidth ranges plus FLOP-rate compute terms.
+Benchmarks multiply these by measured rounds-to-target-accuracy to
+reproduce Fig. 5 (time) and Fig. 6 (traffic).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+BYTES_PER_PARAM = 4  # fp32 on the wire, as in the paper's PyTorch rig
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * BYTES_PER_PARAM
+               for x in jax.tree.leaves(tree))
+
+
+def tree_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+@dataclass
+class CostModel:
+    up_mbps: tuple = (0.8, 8.0)      # client -> PS (paper Section V-C)
+    down_mbps: tuple = (10.0, 20.0)  # PS -> client
+    client_gflops: float = 20.0      # Jetson-class effective rate
+    server_gflops: float = 2000.0    # A6000-class effective rate
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed)
+
+    def _link(self, rng) -> tuple[float, float]:
+        up = rng.uniform(*self.up_mbps) * 1e6 / 8     # bytes/s
+        down = rng.uniform(*self.down_mbps) * 1e6 / 8
+        return up, down
+
+
+@dataclass
+class RoundBill:
+    bytes_up: float
+    bytes_down: float
+    seconds: float
+
+    @property
+    def bytes_total(self):
+        return self.bytes_up + self.bytes_down
+
+
+def _flops_per_sample(cfg: ArchConfig) -> float:
+    """Forward FLOPs per sample (x3 for fwd+bwd)."""
+    if cfg.arch_type == "cnn":
+        f, cin, hw = 0.0, 3, cfg.image_size
+        for cout in cfg.cnn_channels:
+            f += 2 * 9 * cin * cout * hw * hw
+            cin = cout
+            hw //= 2
+        feat = cin * hw * hw * 4  # rough: un-halved last pool compensation
+        for fc in cfg.cnn_fc:
+            f += 2 * feat * fc
+            feat = fc
+        f += 2 * feat * max(cfg.num_classes, 1)
+        return f
+    return 2.0 * cfg.param_count()
+
+
+def round_bill(method: str, cfg: ArchConfig, *, bottom_bytes: int,
+               full_bytes: int, feat_bytes_per_batch: int, k_s: int, k_u: int,
+               n_active: int, batch: int, cost: CostModel,
+               helpers: int = 2) -> RoundBill:
+    """Bytes and seconds for one aggregation round of ``method``."""
+    rng = cost._rng
+    fwd = _flops_per_sample(cfg)
+    server_s = k_s * 3 * fwd * batch / (cost.server_gflops * 1e9)
+
+    if method in ("semifl", "fedswitch", "fedmatch"):
+        down = full_bytes * n_active * (1 + (helpers if method == "fedmatch"
+                                             else 0))
+        up = full_bytes * n_active
+        client_s = []
+        for _ in range(n_active):
+            u, d = cost._link(rng)
+            comp = k_u * 3 * fwd * batch / (cost.client_gflops * 1e9)
+            client_s.append(down / n_active / d + up / n_active / u + comp)
+        return RoundBill(up, down, server_s + max(client_s))
+
+    if method == "supervised-only":
+        return RoundBill(0.0, 0.0, server_s)
+
+    # split methods: semisfl / fedswitch-sl
+    down_models = 2 * bottom_bytes * n_active          # student + teacher
+    up_models = bottom_bytes * n_active
+    feat_up = 2 * feat_bytes_per_batch * k_u * n_active  # student + teacher
+    grad_down = feat_bytes_per_batch * k_u * n_active
+    client_s = []
+    bottom_frac = bottom_bytes / max(full_bytes, 1)
+    for _ in range(n_active):
+        u, d = cost._link(rng)
+        comp = k_u * 3 * fwd * bottom_frac * batch / (cost.client_gflops * 1e9)
+        comm = ((down_models + grad_down) / n_active / d
+                + (up_models + feat_up) / n_active / u)
+        client_s.append(comm + comp)
+    server_semi = k_u * 3 * fwd * (1 - bottom_frac) * batch * n_active \
+        / (cost.server_gflops * 1e9)
+    return RoundBill(up_models + feat_up, down_models + grad_down,
+                     server_s + server_semi + max(client_s))

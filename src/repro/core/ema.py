@@ -1,0 +1,13 @@
+"""Teacher EMA:  w~ <- gamma * w~ + (1 - gamma) * w   (Section III step (1),
+Eq. (8) second line for client-side teacher bottoms)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ema_update(teacher, student, gamma: float):
+    return jax.tree.map(
+        lambda t, s: (gamma * t.astype(jnp.float32)
+                      + (1.0 - gamma) * s.astype(jnp.float32)).astype(t.dtype),
+        teacher, student)

@@ -1,0 +1,309 @@
+"""The SemiSFL training engine (Section III workflow + Alg. 1).
+
+One aggregation round h:
+
+  (1) Supervised training on the PS: K_s^h iterations on labeled data with
+      loss  l_s = H + T  (CE + supervised-contrastive, Eq. (4)); the teacher
+      EMA w~ is updated batchwise and its projected features are enqueued
+      into the global memory queue.
+  (2) Bottom-model broadcast: the global bottom w_c^{h+} and teacher bottom
+      w~_c^{h+} go to the N_h active clients.
+  (3)-(4) Cross-entity semi-supervised training: K_u iterations; clients
+      produce student features (strong aug) and teacher features (weak
+      aug); the PS computes pseudo-labels with the *teacher* top model and
+      l_u = H + C (consistency Eq. (1) + clustering regularization
+      Eq. (5)); server top/projection update with the client-mean gradient
+      (Eq. (7)); each client updates its own bottom with its own gradient
+      and EMA-updates its teacher bottom (Eq. (8)).
+  (5) Bottom aggregation: FedAvg over client bottoms.
+
+Clients are simulated as a stacked leading axis on bottom parameters —
+vmap over clients inside one jitted step (on the production mesh that axis
+shards over the data axes; the FedAvg becomes an all-reduce)."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import losses
+from repro.core.adaptation import FreqController
+from repro.core.ema import ema_update
+from repro.core.queue import FeatureQueue, enqueue, init_queue
+from repro.core.split import (apply_projection_head, init_projection_head,
+                              pool_features)
+from repro.data.augment import strong_augment, weak_augment
+from repro.data.pipeline import Loader, stack_client_batches
+from repro.models import build_model
+from repro.optim import apply_updates, sgd
+
+Array = jax.Array
+
+
+class SemiSFLState(NamedTuple):
+    params: Any        # {"bottom", "top", "proj"} — the global model w
+    teacher: Any       # same structure — w~
+    opt: Any           # optimizer state for the full model (supervised phase)
+    queue: FeatureQueue
+    rng: Array
+    round: Array
+
+
+@dataclass
+class RoundMetrics:
+    f_s: float = 0.0
+    f_u: float = 0.0
+    mask_rate: float = 0.0
+    k_s: int = 0
+    test_acc: float = float("nan")
+
+
+class SemiSFLSystem:
+    """Paper-faithful classification-task SemiSFL (the reproduction rig)."""
+
+    def __init__(self, cfg: ArchConfig, *, n_clients_per_round: int = 10,
+                 lr: float = 0.02, momentum: float = 0.9,
+                 lr_schedule: Optional[Callable] = None,
+                 use_clustering: bool = True,
+                 use_supcon: bool = True):
+        self.cfg = cfg
+        self.s = cfg.semisfl
+        self.model = build_model(cfg)
+        self.n_active = n_clients_per_round
+        self.opt = sgd(momentum=momentum)
+        self.lr_schedule = lr_schedule or (lambda step: jnp.float32(lr))
+        self.use_clustering = use_clustering
+        self.use_supcon = use_supcon
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0) -> SemiSFLState:
+        rng = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(rng, 3)
+        mp = self.model.init(k1)
+        params = {"bottom": mp["bottom"], "top": mp["top"],
+                  "proj": init_projection_head(k2, self.cfg)}
+        return SemiSFLState(
+            params=params,
+            teacher=jax.tree.map(jnp.copy, params),
+            opt=self.opt.init(params),
+            queue=init_queue(self.s.queue_len, self._proj_dim()),
+            rng=k3,
+            round=jnp.zeros((), jnp.int32),
+        )
+
+    def _proj_dim(self):
+        if self.s.proj_head == "none":
+            from repro.core.split import feature_dim
+            return feature_dim(self.cfg)
+        return self.s.proj_dim
+
+    # ------------------------------------------------------------------
+    # jitted steps
+    # ------------------------------------------------------------------
+    def _forward(self, params, batch_x, *, train=True):
+        feats, _, extras = self.model.bottom_apply(
+            params["bottom"], {"images": batch_x})
+        out, _ = self.model.top_apply(params["top"], feats, extras=extras)
+        z = apply_projection_head(params["proj"], self.cfg,
+                                  pool_features(self.cfg, feats))
+        return out["logits"], z, feats
+
+    def _build_steps(self):
+        cfg, s = self.cfg, self.s
+
+        # ---------------- supervised step (PS, Alg.1 lines 4-5) ----------
+        def supervised_step(state: SemiSFLState, x, y, step_idx):
+            rng, k_aug = jax.random.split(state.rng)
+            xs = strong_augment(k_aug, x)
+            lr = self.lr_schedule(step_idx)
+
+            def loss_fn(params):
+                logits, z, _ = self._forward(params, xs)
+                ce = losses.cross_entropy(logits, y)
+                t = 0.0
+                if self.use_supcon:
+                    t = losses.supervised_contrastive_loss(
+                        z, y, state.queue.z, state.queue.label,
+                        state.queue.valid & state.queue.conf, s.temperature)
+                return ce + t, (ce, t)
+
+            (loss, (ce, t)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params)
+            updates, opt = self.opt.update(grads, state.opt, state.params, lr)
+            params = apply_updates(state.params, updates)
+            teacher = ema_update(state.teacher, params, s.ema_decay)
+
+            # enqueue teacher features of this labeled batch (ground truth
+            # labels, always confident)
+            t_logits, tz, _ = self._forward(teacher, xs)
+            queue = enqueue(state.queue, jax.lax.stop_gradient(tz), y)
+            new_state = SemiSFLState(params, teacher, opt, queue, rng,
+                                     state.round)
+            return new_state, loss
+
+        self.supervised_step = jax.jit(supervised_step)
+
+        # --------------- cross-entity semi-supervised step ----------------
+        def semi_step(params_top, params_proj, teacher, client_bottoms,
+                      client_teacher_bottoms, queue: FeatureQueue, xu, rng,
+                      step_idx):
+            """xu: (N, B, H, W, C) unlabeled client batches."""
+            n = xu.shape[0]
+            rng, kw, ks_ = jax.random.split(rng, 3)
+            xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
+            xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
+            lr = self.lr_schedule(step_idx)
+
+            # teacher path: client-side teacher bottoms + server teacher top
+            def t_bottom(pb, x):
+                feats, _, extras = self.model.bottom_apply(pb, {"images": x})
+                return feats
+            t_feats = jax.vmap(t_bottom)(client_teacher_bottoms, xw)
+            t_feats_flat = t_feats.reshape((-1,) + t_feats.shape[2:])
+            t_out, _ = self.model.top_apply(
+                teacher["top"], t_feats_flat,
+                extras={"aux_loss": jnp.zeros((), jnp.float32)})
+            pseudo, conf_ok, conf = losses.pseudo_labels(
+                t_out["logits"], s.confidence_threshold)
+            pseudo = jax.lax.stop_gradient(pseudo)
+            conf_ok = jax.lax.stop_gradient(conf_ok)
+            tz = apply_projection_head(teacher["proj"], cfg,
+                                       pool_features(cfg, t_feats_flat))
+            tz = jax.lax.stop_gradient(tz)
+
+            def loss_fn(bottoms, top, proj):
+                def s_bottom(pb, x):
+                    feats, _, extras = self.model.bottom_apply(pb, {"images": x})
+                    return feats
+                feats = jax.vmap(s_bottom)(bottoms, xs)
+                feats_flat = feats.reshape((-1,) + feats.shape[2:])
+                out, _ = self.model.top_apply(
+                    top, feats_flat,
+                    extras={"aux_loss": jnp.zeros((), jnp.float32)})
+                h = losses.cross_entropy(out["logits"], pseudo, mask=conf_ok)
+                c = 0.0
+                if self.use_clustering:
+                    z = apply_projection_head(proj, cfg,
+                                              pool_features(cfg, feats_flat))
+                    c = losses.clustering_loss(
+                        z, pseudo, jnp.ones_like(conf_ok), queue.z,
+                        queue.label, queue.conf, queue.valid, s.temperature)
+                return h + c, (h, c)
+
+            (loss, (h, c)), grads = jax.value_and_grad(
+                loss_fn, argnums=(0, 1, 2), has_aux=True)(
+                client_bottoms, params_top, params_proj)
+            g_bottoms, g_top, g_proj = grads
+            # Eq.(7): server-side mean over clients (global mean == /1, the
+            # loss already averages over all N*B samples); Eq.(8): each
+            # client applies its own gradient — undo the 1/N factor.
+            g_bottoms = jax.tree.map(lambda g: g * n, g_bottoms)
+            new_bottoms = jax.tree.map(lambda p, g: p - lr * g,
+                                       client_bottoms, g_bottoms)
+            new_top = jax.tree.map(lambda p, g: p - lr * g, params_top, g_top)
+            new_proj = jax.tree.map(lambda p, g: p - lr * g, params_proj,
+                                    g_proj)
+            new_teacher_bottoms = ema_update(client_teacher_bottoms,
+                                             new_bottoms, s.ema_decay)
+            queue = enqueue(queue, tz, pseudo, conf_ok)
+            mask_rate = 1.0 - conf_ok.astype(jnp.float32).mean()
+            return (new_bottoms, new_top, new_proj, new_teacher_bottoms,
+                    queue, rng, loss, h, mask_rate)
+
+        self.semi_step = jax.jit(semi_step)
+
+        # ---------------- evaluation (teacher model, Section V-B) ---------
+        def eval_batch(params, x, y):
+            logits, _, _ = self._forward(params, x)
+            return (logits.argmax(-1) == y).astype(jnp.float32).sum()
+
+        self.eval_batch = jax.jit(eval_batch)
+
+    # ------------------------------------------------------------------
+    # round driver
+    # ------------------------------------------------------------------
+    def broadcast(self, state: SemiSFLState):
+        """Step (2): replicate global + teacher bottoms to active clients."""
+        stack = lambda t: jnp.broadcast_to(
+            t, (self.n_active,) + t.shape).copy()
+        bottoms = jax.tree.map(stack, state.params["bottom"])
+        t_bottoms = jax.tree.map(stack, state.teacher["bottom"])
+        return bottoms, t_bottoms
+
+    @staticmethod
+    def aggregate(client_bottoms):
+        """Step (5): FedAvg over the client axis."""
+        return jax.tree.map(lambda t: t.mean(axis=0), client_bottoms)
+
+    def run_round(self, state: SemiSFLState, labeled: Loader,
+                  client_loaders_: list[Loader], controller: FreqController,
+                  active: Optional[list[int]] = None,
+                  rng_np: Optional[np.random.RandomState] = None
+                  ) -> tuple[SemiSFLState, RoundMetrics]:
+        rng_np = rng_np or np.random.RandomState(int(state.round))
+        k_s = controller.k_s
+        step0 = int(state.round) * (self.s.k_s_init + self.s.k_u)
+
+        # (1) supervised phase
+        f_s_acc = []
+        for k in range(k_s):
+            x, y = labeled.next()
+            state, loss = self.supervised_step(state, jnp.asarray(x),
+                                               jnp.asarray(y), step0 + k)
+            f_s_acc.append(float(loss))
+
+        # (2) broadcast
+        if active is None:
+            active = list(rng_np.choice(len(client_loaders_),
+                                        size=min(self.n_active,
+                                                 len(client_loaders_)),
+                                        replace=False))
+        bottoms, t_bottoms = self.broadcast(state)
+
+        # (3)-(4) cross-entity phase
+        top, proj = state.params["top"], state.params["proj"]
+        queue, rng = state.queue, state.rng
+        f_u_acc, mask_acc = [], []
+        for k in range(self.s.k_u):
+            xu, _ = stack_client_batches(client_loaders_, active)
+            (bottoms, top, proj, t_bottoms, queue, rng, loss, h_loss,
+             mask_rate) = self.semi_step(top, proj, state.teacher, bottoms,
+                                         t_bottoms, queue, jnp.asarray(xu),
+                                         rng, step0 + k_s + k)
+            f_u_acc.append(float(loss))
+            mask_acc.append(float(mask_rate))
+
+        # (5) aggregate
+        new_bottom = self.aggregate(bottoms)
+        params = {"bottom": new_bottom, "top": top, "proj": proj}
+        state = SemiSFLState(params, state.teacher, state.opt, queue, rng,
+                             state.round + 1)
+
+        f_s = float(np.mean(f_s_acc)) if f_s_acc else 0.0
+        f_u = float(np.mean(f_u_acc)) if f_u_acc else 0.0
+        controller.update(f_s, f_u)
+        return state, RoundMetrics(f_s=f_s, f_u=f_u,
+                                   mask_rate=float(np.mean(mask_acc) if mask_acc else 0),
+                                   k_s=k_s)
+
+    def evaluate(self, state: SemiSFLState, test_x: np.ndarray,
+                 test_y: np.ndarray, batch: int = 256,
+                 use_teacher: bool = True) -> float:
+        params = state.teacher if use_teacher else state.params
+        correct = 0.0
+        for i in range(0, len(test_y), batch):
+            correct += float(self.eval_batch(
+                params, jnp.asarray(test_x[i: i + batch]),
+                jnp.asarray(test_y[i: i + batch])))
+        return correct / len(test_y)
+
+
+def make_controller(cfg: ArchConfig, n_labeled: int, n_total: int
+                    ) -> FreqController:
+    return FreqController(cfg.semisfl, n_labeled, n_total)

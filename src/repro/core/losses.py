@@ -1,0 +1,162 @@
+"""SemiSFL loss functions.
+
+  * Eq. (1): consistency regularization — CE of student predictions on
+    strongly-augmented inputs against teacher pseudo-labels, masked by the
+    confidence threshold tau.
+  * Eq. (3): supervised-contrastive loss T (Khosla et al.) over projected
+    features, references = current batch + memory queue.
+  * Eq. (5): clustering regularization C — projected *student* features are
+    pulled toward same-pseudo-label *teacher* clusters in the queue; the
+    denominator runs over every valid queue entry.
+
+All losses mean-reduce over samples that actually participate (masked
+softmax-CE style); samples with an empty positive set contribute zero, so
+the gradients match the paper's set-based definitions.
+
+The (B, |Q|) similarity computations here are the jnp oracle for the fused
+Pallas kernel in ``repro.kernels.clustering_loss``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def streaming_vocab_stats(hidden: Array, w: Array, chunk: int = 8192,
+                          differentiable: bool = False):
+    """Vocab-chunked (lse, argmax, max-logit) over logits = hidden @ w
+    without materializing (B, S, V)  (§Perf `chunked_ce` variant).
+
+    hidden: (..., d); w: (d, V).  Returns (lse, argmax, max_logit), each
+    (...,) float32/int32.  With ``differentiable`` the chunk body is
+    rematerialized in the backward pass (jax.checkpoint)."""
+    d, v = w.shape
+    n_chunks = max(1, -(-v // chunk))
+    chunk = -(-v // n_chunks)
+    pad_v = n_chunks * chunk
+    wp = jnp.pad(w, ((0, 0), (0, pad_v - v)),
+                 constant_values=0.0) if pad_v != v else w
+    hf = hidden.astype(jnp.float32)
+    lead = hidden.shape[:-1]
+
+    def body(carry, i):
+        m, s, am = carry
+        wc = jax.lax.dynamic_slice_in_dim(wp, i * chunk, chunk, axis=1)
+        logits = hf @ wc.astype(jnp.float32)              # (..., chunk)
+        if pad_v != v:
+            col = i * chunk + jnp.arange(chunk)
+            logits = jnp.where(col < v, logits, NEG_INF)
+        cm = logits.max(-1)
+        ci = logits.argmax(-1).astype(jnp.int32) + i * chunk
+        new_m = jnp.maximum(m, cm)
+        s = s * jnp.exp(m - new_m) + jnp.exp(logits - new_m[..., None]).sum(-1)
+        am = jnp.where(cm > m, ci, am)
+        return (new_m, s, am), None
+
+    if differentiable:
+        body = jax.checkpoint(body, prevent_cse=False)
+    init = (jnp.full(lead, NEG_INF, jnp.float32),
+            jnp.zeros(lead, jnp.float32),
+            jnp.zeros(lead, jnp.int32))
+    (m, s, am), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    lse = m + jnp.log(jnp.maximum(s, 1e-30))
+    return lse, am, m
+
+
+def chunked_cross_entropy(hidden: Array, w: Array, labels: Array,
+                          mask: Array | None = None,
+                          chunk: int = 8192) -> Array:
+    """Masked CE without (B, S, V) logits: lse via streaming_vocab_stats,
+    label logit via a gathered-column einsum."""
+    lse, _, _ = streaming_vocab_stats(hidden, w, chunk, differentiable=True)
+    w_lab = jnp.take(w, labels, axis=1)                  # (d, ...) gathered
+    w_lab = jnp.moveaxis(w_lab, 0, -1)                   # (..., d)
+    label_logit = jnp.sum(hidden.astype(jnp.float32)
+                          * w_lab.astype(jnp.float32), axis=-1)
+    nll = lse - label_logit
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def cross_entropy(logits: Array, labels: Array,
+                  mask: Array | None = None) -> Array:
+    """Mean CE over (optionally masked) samples. logits (..., M)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def pseudo_labels(teacher_logits: Array, tau: float):
+    """Eq. (1) machinery: argmax labels + confidence mask."""
+    probs = jax.nn.softmax(teacher_logits.astype(jnp.float32), axis=-1)
+    conf = probs.max(axis=-1)
+    return probs.argmax(axis=-1), conf > tau, conf
+
+
+def consistency_loss(student_logits: Array, teacher_logits: Array,
+                     tau: float) -> tuple[Array, Array]:
+    """Eq. (1). Returns (loss, mask_rate)."""
+    labels, ok, _ = pseudo_labels(teacher_logits, tau)
+    loss = cross_entropy(student_logits, jax.lax.stop_gradient(labels),
+                         mask=jax.lax.stop_gradient(ok))
+    return loss, 1.0 - ok.astype(jnp.float32).mean()
+
+
+def _masked_contrastive(z: Array, ref: Array, pos_mask: Array,
+                        valid_mask: Array, temperature: float) -> Array:
+    """Shared form of Eq. (3)/(5).
+
+    z: (B, d) anchors (gradients flow); ref: (R, d) references (stopped);
+    pos_mask: (B, R) bool positives; valid_mask: (R,) bool denominator set.
+    loss_j = -1/|P(j)| sum_{p in P(j)} log softmax_over_valid(z_j . ref / k)_p
+    Anchors with empty P(j) contribute 0; mean over contributing anchors.
+    """
+    zf = z.astype(jnp.float32)
+    rf = jax.lax.stop_gradient(ref.astype(jnp.float32))
+    logits = (zf @ rf.T) / temperature                       # (B, R)
+    logits = jnp.where(valid_mask[None, :], logits, NEG_INF)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    pos = pos_mask & valid_mask[None, :]
+    n_pos = pos.sum(axis=-1)
+    per_anchor = -(jnp.where(pos, logp, 0.0).sum(axis=-1)
+                   / jnp.maximum(n_pos, 1))
+    has_pos = n_pos > 0
+    denom = jnp.maximum(has_pos.sum(), 1)
+    return jnp.where(has_pos, per_anchor, 0.0).sum() / denom
+
+
+def supervised_contrastive_loss(z: Array, labels: Array, queue_z: Array,
+                                queue_labels: Array, queue_valid: Array,
+                                temperature: float) -> Array:
+    """Eq. (3): references = (batch \\ self) + labeled queue entries."""
+    b = z.shape[0]
+    ref = jnp.concatenate([z, queue_z], axis=0)
+    ref_labels = jnp.concatenate([labels, queue_labels], axis=0)
+    ref_valid = jnp.concatenate([jnp.ones((b,), bool), queue_valid], axis=0)
+    pos = labels[:, None] == ref_labels[None, :]
+    not_self = ~jnp.eye(b, ref.shape[0], dtype=bool)
+    return _masked_contrastive(z, ref, pos & not_self,
+                               ref_valid & jnp.concatenate(
+                                   [jnp.ones((b,), bool), queue_valid]),
+                               temperature)
+
+
+def clustering_loss(z: Array, pseudo: Array, anchor_ok: Array,
+                    queue_z: Array, queue_labels: Array, queue_conf: Array,
+                    queue_valid: Array, temperature: float) -> Array:
+    """Eq. (5): anchors = projected student features of unlabeled samples
+    (anchor_ok gates which anchors have a usable pseudo-label q_j);
+    positives = queue entries with the same pseudo-label whose confidence
+    reached tau; denominator = all valid queue entries."""
+    pos = (pseudo[:, None] == queue_labels[None, :]) & queue_conf[None, :]
+    pos = pos & anchor_ok[:, None]
+    return _masked_contrastive(z, queue_z, pos, queue_valid, temperature)

@@ -1,0 +1,61 @@
+"""The global two-level memory queue Q (Section III).
+
+A ring buffer over projected *teacher* features with, per entry: the label
+(ground-truth for supervised-phase entries, pseudo-label otherwise), a
+confidence flag (always True for labeled entries — the "two-level"
+structure: supervised-phase entries are dequeued at a lower frequency
+because they are re-enqueued every round and never confidence-filtered),
+and a validity flag.  Lives on the PS; in the sharded runtime it is
+replicated over data axes and feature-sharded over the model axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class FeatureQueue(NamedTuple):
+    z: Array         # (Q, proj_dim) projected teacher features
+    label: Array     # (Q,) int32 labels / pseudo-labels
+    conf: Array      # (Q,) bool — confidence reached tau (True for labeled)
+    valid: Array     # (Q,) bool — slot holds a real entry
+    ptr: Array       # () int32 ring pointer
+
+
+def init_queue(queue_len: int, proj_dim: int) -> FeatureQueue:
+    return FeatureQueue(
+        z=jnp.zeros((queue_len, proj_dim), jnp.float32),
+        label=jnp.zeros((queue_len,), jnp.int32),
+        conf=jnp.zeros((queue_len,), bool),
+        valid=jnp.zeros((queue_len,), bool),
+        ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+def enqueue(q: FeatureQueue, z: Array, labels: Array,
+            conf: Array | None = None) -> FeatureQueue:
+    """Insert a batch (B <= Q) at the ring pointer (wrap-around)."""
+    b = z.shape[0]
+    qlen = q.z.shape[0]
+    slots = (q.ptr + jnp.arange(b)) % qlen
+    if conf is None:
+        conf = jnp.ones((b,), bool)
+    return FeatureQueue(
+        z=q.z.at[slots].set(z.astype(q.z.dtype)),
+        label=q.label.at[slots].set(labels.astype(jnp.int32)),
+        conf=q.conf.at[slots].set(conf),
+        valid=q.valid.at[slots].set(True),
+        ptr=(q.ptr + b) % qlen,
+    )
+
+
+def queue_stats(q: FeatureQueue) -> dict:
+    return {
+        "fill": q.valid.mean(),
+        "confident_frac": (q.conf & q.valid).sum()
+        / jnp.maximum(q.valid.sum(), 1),
+    }

@@ -1,0 +1,62 @@
+"""Split-model utilities: the projection head w_p (Section III, Table V)
+and feature pooling that turns split-layer activations into per-sample
+vectors for the contrastive losses.
+
+The projection head lives on the PS next to the top model; its input is the
+pooled split-layer feature.  ``proj_head`` kind follows Table V:
+``none`` (identity), ``linear`` (one layer), ``mlp`` (two layers + ReLU —
+the paper's best)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Params, dense_init
+
+Array = jax.Array
+
+
+def feature_dim(cfg: ArchConfig) -> int:
+    if cfg.arch_type == "cnn":
+        # global-average-pooled conv maps at the split layer
+        c = cfg.cnn_channels[min(cfg.split_layer, len(cfg.cnn_channels)) - 1]
+        return c
+    return cfg.d_model
+
+
+def pool_features(cfg: ArchConfig, feats: Array) -> Array:
+    """(B, ... , d) split-layer activations -> (B, feature_dim)."""
+    if feats.ndim == 4:          # CNN maps (B, H, W, C)
+        return feats.mean(axis=(1, 2))
+    if feats.ndim == 3:          # sequence (B, S, d)
+        return feats.mean(axis=1)
+    return feats
+
+
+def pool_token_features(feats: Array, idx: Array) -> Array:
+    """Select per-sequence token features (B, S, d), idx (B, T) -> (B, T, d).
+    LM-task adaptation: a subset of token positions joins clustering."""
+    return jnp.take_along_axis(feats, idx[..., None], axis=1)
+
+
+def init_projection_head(key: Array, cfg: ArchConfig) -> Params:
+    s = cfg.semisfl
+    d_in = feature_dim(cfg)
+    if s.proj_head == "none":
+        return {}
+    ks = jax.random.split(key, 2)
+    if s.proj_head == "linear":
+        return {"w1": dense_init(ks[0], d_in, s.proj_dim, jnp.float32)}
+    return {"w1": dense_init(ks[0], d_in, s.proj_hidden, jnp.float32),
+            "w2": dense_init(ks[1], s.proj_hidden, s.proj_dim, jnp.float32)}
+
+
+def apply_projection_head(p: Params, cfg: ArchConfig, feats: Array) -> Array:
+    """Pooled features -> l2-normalized projected embedding z."""
+    x = feats.astype(jnp.float32)
+    if "w1" in p:
+        x = x @ p["w1"]
+    if "w2" in p:
+        x = jax.nn.relu(x) @ p["w2"]
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)

@@ -1,0 +1,120 @@
+"""Weak / strong augmentation (Section III step (3)).
+
+Weak: random horizontal flip + random crop with reflection padding — exactly
+the paper's a_w.  Strong: a JAX-native RandAugment-style pipeline a_s (the
+paper uses RandAugment): a random pair of photometric/geometric ops with
+random magnitudes, plus cutout.  Token analogues (for the LM-task
+adaptation of the technique, DESIGN.md §4): weak = identity, strong = random
+token masking/substitution.
+
+All ops are vectorized, jittable, and keyed by explicit PRNG keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# image ops
+# ---------------------------------------------------------------------------
+
+def _rand_flip(key: Array, x: Array) -> Array:
+    flip = jax.random.bernoulli(key, 0.5, (x.shape[0], 1, 1, 1))
+    return jnp.where(flip, x[:, :, ::-1, :], x)
+
+
+def _rand_crop(key: Array, x: Array, pad: int = 4) -> Array:
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="reflect")
+    k1, k2 = jax.random.split(key)
+    dx = jax.random.randint(k1, (b,), 0, 2 * pad + 1)
+    dy = jax.random.randint(k2, (b,), 0, 2 * pad + 1)
+
+    def crop(img, ox, oy):
+        return jax.lax.dynamic_slice(img, (ox, oy, 0), (h, w, c))
+
+    return jax.vmap(crop)(xp, dx, dy)
+
+
+def _brightness(key: Array, x: Array, mag: Array) -> Array:
+    delta = (jax.random.uniform(key, (x.shape[0], 1, 1, 1)) * 2 - 1) * mag
+    return x + delta
+
+
+def _contrast(key: Array, x: Array, mag: Array) -> Array:
+    f = 1.0 + (jax.random.uniform(key, (x.shape[0], 1, 1, 1)) * 2 - 1) * mag
+    mean = x.mean(axis=(1, 2, 3), keepdims=True)
+    return (x - mean) * f + mean
+
+
+def _invert(key: Array, x: Array, mag: Array) -> Array:
+    inv = jax.random.bernoulli(key, 0.5, (x.shape[0], 1, 1, 1))
+    return jnp.where(inv, 1.0 - x, x)
+
+
+def _solarize(key: Array, x: Array, mag: Array) -> Array:
+    thr = 1.0 - jax.random.uniform(key, (x.shape[0], 1, 1, 1)) * mag
+    return jnp.where(x > thr, 1.0 - x, x)
+
+
+def _cutout(key: Array, x: Array, frac: float = 0.35) -> Array:
+    b, h, w, c = x.shape
+    ch = max(1, int(h * frac))
+    k1, k2 = jax.random.split(key)
+    cy = jax.random.randint(k1, (b,), 0, h - ch + 1)
+    cx = jax.random.randint(k2, (b,), 0, w - ch + 1)
+    ys = jnp.arange(h)[None, :, None]
+    xs = jnp.arange(w)[None, None, :]
+    mask = ((ys >= cy[:, None, None]) & (ys < cy[:, None, None] + ch)
+            & (xs >= cx[:, None, None]) & (xs < cx[:, None, None] + ch))
+    return jnp.where(mask[..., None], 0.5, x)
+
+
+# Label-preserving op pool for the synthetic pattern classes: inversion /
+# solarization are excluded by default because class identity in the
+# synthetic datasets is carried by color patterns (they stay available for
+# natural-image use via the `ops` argument).
+_STRONG_OPS = (_brightness, _contrast)
+_STRONG_OPS_FULL = (_brightness, _contrast, _invert, _solarize)
+
+
+def weak_augment(key: Array, x: Array) -> Array:
+    k1, k2 = jax.random.split(key)
+    return _rand_crop(k2, _rand_flip(k1, x))
+
+
+def strong_augment(key: Array, x: Array, n_ops: int = 2,
+                   magnitude: float = 0.5, ops=_STRONG_OPS,
+                   cutout_frac: float = 0.25) -> Array:
+    """RandAugment-style: weak base + n random photometric ops + cutout."""
+    keys = jax.random.split(key, n_ops + 3)
+    x = weak_augment(keys[0], x)
+    for i in range(n_ops):
+        ks, kop = jax.random.split(keys[i + 1])
+        op_idx = jax.random.randint(ks, (), 0, len(ops))
+        branches = [lambda xx, kk=kop, f=f: f(kk, xx, magnitude)
+                    for f in ops]
+        x = jax.lax.switch(op_idx, branches, x)
+    x = _cutout(keys[-1], x, cutout_frac)
+    return jnp.clip(x, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# token ops (LM-task adaptation)
+# ---------------------------------------------------------------------------
+
+def token_weak(key: Array, tokens: Array, vocab: int) -> Array:
+    return tokens
+
+
+def token_strong(key: Array, tokens: Array, vocab: int,
+                 mask_rate: float = 0.15, mask_id: int = 0) -> Array:
+    k1, k2, k3 = jax.random.split(key, 3)
+    drop = jax.random.bernoulli(k1, mask_rate, tokens.shape)
+    sub = jax.random.bernoulli(k2, 0.5, tokens.shape)
+    rand_tok = jax.random.randint(k3, tokens.shape, 0, vocab)
+    corrupted = jnp.where(sub, rand_tok, jnp.full_like(tokens, mask_id))
+    return jnp.where(drop, corrupted, tokens)

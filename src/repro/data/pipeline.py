@@ -1,0 +1,52 @@
+"""Batching pipeline: labeled server loader + per-client unlabeled loaders.
+
+Numpy-side sampling (cheap, CPU) feeding jnp arrays to jitted steps.  Each
+loader is an infinite sampler with its own RandomState so experiments are
+reproducible per seed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+
+class Loader:
+    """Infinite shuffled batch sampler over a (subset of a) dataset."""
+
+    def __init__(self, ds: Dataset, indices: np.ndarray | None, batch: int,
+                 seed: int):
+        self.ds = ds
+        self.idx = np.arange(len(ds.y)) if indices is None else np.asarray(indices)
+        self.batch = batch
+        self.rng = np.random.RandomState(seed)
+        self._order = self.rng.permutation(self.idx)
+        self._cursor = 0
+
+    def __len__(self):
+        return len(self.idx)
+
+    def next(self) -> tuple[np.ndarray, np.ndarray]:
+        if len(self.idx) < self.batch:
+            # tiny client (extreme Dirichlet skew): sample with replacement
+            # so client batches stack to a fixed shape
+            take = self.rng.choice(self.idx, size=self.batch, replace=True)
+            return self.ds.x[take], self.ds.y[take]
+        b = self.batch
+        if self._cursor + b > len(self._order):
+            self._order = self.rng.permutation(self.idx)
+            self._cursor = 0
+        take = self._order[self._cursor: self._cursor + b]
+        self._cursor += b
+        return self.ds.x[take], self.ds.y[take]
+
+
+def client_loaders(ds: Dataset, parts: list[np.ndarray], batch: int,
+                   seed: int) -> list[Loader]:
+    return [Loader(ds, p, batch, seed + 31 * i) for i, p in enumerate(parts)]
+
+
+def stack_client_batches(loaders: list[Loader], active: list[int]):
+    """Sample one batch per active client -> stacked (N, B, ...) arrays."""
+    xs, ys = zip(*(loaders[i].next() for i in active))
+    return np.stack(xs), np.stack(ys)

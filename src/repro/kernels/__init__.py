@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for this system's compute hot-spots (DESIGN.md §6):
+clustering-regularization loss (the paper's server-side hot loop), flash
+attention (prefill path of every attention arch), and the Mamba2 chunked
+scan (zamba2).  Each has a jnp oracle in ref.py and a jit wrapper in
+ops.py; validation is interpret=True on CPU, target is Mosaic on TPU."""
+from repro.kernels.ops import (clustering_loss, flash_attention, mamba2_scan,
+                               slstm_scan)
+
+__all__ = ["clustering_loss", "flash_attention", "mamba2_scan", "slstm_scan"]

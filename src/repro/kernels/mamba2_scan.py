@@ -1,0 +1,108 @@
+"""Mamba2 chunked selective-scan Pallas TPU kernel (zamba2's hot loop).
+
+Grid: (batch, heads, n_chunks) with the chunk axis innermost sequential;
+the recurrent SSM state (N, hd) is carried in VMEM scratch across chunk
+steps.  Within a chunk everything is matmul form (MXU): the (c, c) decay
+matrix, C.B^T scores, and the state in/out products — this is the TPU
+adaptation of the SSD algorithm (intra-chunk quadratic + inter-chunk
+recurrence) with chunk length tuned so (c, c) and (c, N) tiles stay in
+VMEM.
+
+B/C are shared across heads (single SSM group), expressed through their
+BlockSpec index maps — no head-broadcast copies in HBM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 128
+
+
+def _mamba2_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
+                   state_scr, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (c, hd)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # (c,)
+    A = a_ref[0]                                  # scalar
+    D = d_ref[0]
+    B = b_ref[0, 0].astype(jnp.float32)           # (c, N)
+    C = c_ref[0, 0].astype(jnp.float32)           # (c, N)
+
+    a = dt * A                                    # (c,), negative
+    cum = jnp.cumsum(a)                           # inclusive
+    # intra-chunk
+    dec = jnp.exp(cum[:, None] - cum[None, :])
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    dec = jnp.where(tri, dec, 0.0)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    xdt = x * dt[:, None]
+    y = jax.lax.dot_general(cb * dec, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(cum) * C @ state   (state: (N, hd))
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, state_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y += D * x
+    # state update: S <- exp(cum[-1]) S + (B * exp(cum[-1]-cum)).T @ xdt
+    wB = B * jnp.exp(cum[-1] - cum)[:, None]
+    state_scr[...] = (jnp.exp(cum[-1]) * state_scr[...]
+                      + jax.lax.dot_general(wB, xdt, (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_scan(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
+                *, chunk: int = DEFAULT_CHUNK, interpret: bool = True
+                ) -> Array:
+    """x: (b, S, nh, hd); dt: (b, S, nh); A, D: (nh,); B, C: (b, S, N).
+
+    Returns y: (b, S, nh, hd) — same semantics as
+    ``repro.kernels.ref.mamba2_scan_ref``."""
+    b, S, nh, hd = x.shape
+    N = B.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nc = S // c
+    # layouts: (b, nh, nc, c, hd) for x/y; (b, nh, nc, c) for dt;
+    # (b, nc, c, N) for B/C
+    xt = x.transpose(0, 2, 1, 3).reshape(b, nh, nc, c, hd)
+    dtt = dt.transpose(0, 2, 1).reshape(b, nh, nc, c)
+    Bt = B.reshape(b, nc, c, N)
+    Ct = C.reshape(b, nc, c, N)
+    grid = (b, nh, nc)
+
+    y = pl.pallas_call(
+        functools.partial(_mamba2_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, c, hd), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, 1, c, N), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, c, hd),
+                               lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, nc, c, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, hd), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(xt, dtt, A.astype(jnp.float32), Bt, Ct, D.astype(jnp.float32))
+    return y.reshape(b, nh, S, hd).transpose(0, 2, 1, 3)

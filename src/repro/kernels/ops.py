@@ -1,0 +1,62 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (the
+kernel bodies execute in Python on CPU); on a real TPU runtime pass
+``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) to compile the kernels
+to Mosaic.  The wrappers pick hardware-aligned block sizes and fall back to
+the jnp reference for shapes below kernel granularity."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.clustering_loss import clustering_loss_pallas
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba2_scan import mamba2_scan as _mamba2
+
+Array = jax.Array
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, interpret: bool | None = None) -> Array:
+    """(B, H, Sq, hd) x (B, KVH, Skv, hd) -> (B, H, Sq, hd)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    sq, skv = q.shape[2], k.shape[2]
+    if sq < 128 or skv < 128 or sq % 128 or skv % 128:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window, interpret=interpret)
+
+
+def clustering_loss(z: Array, pseudo: Array, anchor_ok: Array, queue_z: Array,
+                    queue_label: Array, queue_conf: Array, queue_valid: Array,
+                    temperature: float, *,
+                    interpret: bool | None = None) -> Array:
+    """Fused Eq. (5); differentiable w.r.t. z (queue is stop-gradient)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    return clustering_loss_pallas(z, pseudo, anchor_ok, queue_z, queue_label,
+                                  queue_conf, queue_valid, temperature,
+                                  128, 512, interpret)
+
+
+def mamba2_scan(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
+                *, chunk: int = 128, interpret: bool | None = None) -> Array:
+    interpret = _INTERPRET if interpret is None else interpret
+    if x.shape[1] < 16:
+        return ref.mamba2_scan_ref(x, dt, A, B, C, D)
+    return _mamba2(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
+
+
+def slstm_scan(wx: Array, r: Array, *, block_t: int = 64,
+               interpret: bool | None = None) -> Array:
+    """Fused sLSTM recurrence (R resident in VMEM across time steps).
+    wx: (B, S, 4, nh, hd); r: (nh, hd, 4*hd) -> h (B, S, nh, hd)."""
+    from repro.kernels.slstm_scan import slstm_scan as _slstm
+    interpret = _INTERPRET if interpret is None else interpret
+    if wx.shape[1] < 8:
+        return ref.slstm_scan_ref(wx, r)
+    return _slstm(wx, r, block_t=block_t, interpret=interpret)

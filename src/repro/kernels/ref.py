@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the shape/dtype sweep tests
+(tests/test_kernels.py) and are intentionally written in the most direct
+form (full logit materialization, sequential scans) — clarity over speed.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0) -> Array:
+    """q: (B, H, Sq, hd); k, v: (B, KVH, Skv, hd). GQA by head grouping."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, hd)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.any(mask, -1)[..., None], w, 0.0)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def clustering_loss_ref(z: Array, pseudo: Array, anchor_ok: Array,
+                        queue_z: Array, queue_label: Array, queue_conf: Array,
+                        queue_valid: Array, temperature: float) -> Array:
+    """Eq. (5) oracle — identical math to repro.core.losses.clustering_loss."""
+    from repro.core.losses import clustering_loss
+    return clustering_loss(z, pseudo, anchor_ok, queue_z, queue_label,
+                           queue_conf, queue_valid, temperature)
+
+
+def slstm_scan_ref(wx: Array, r: Array) -> Array:
+    """Sequential sLSTM oracle. wx: (B, S, 4, nh, hd) gate inputs
+    [z, i, f, o]; r: (nh, hd, 4*hd) gate-major recurrent weights.
+    Exponential-gate recurrence with the m stabilizer, identical to
+    repro.models.xlstm.slstm_step."""
+    b, s, _, nh, hd = wx.shape
+
+    def step(carry, wx_t):
+        h, c, n, m = carry                          # (b, nh, hd) each
+        rec = jnp.einsum("bhd,hdk->bhk", h, r)      # (b, nh, 4*hd)
+        rec = rec.reshape(b, nh, 4, hd).transpose(0, 2, 1, 3)
+        pre = wx_t.astype(jnp.float32) + rec        # (b, 4, nh, hd)
+        zt, it, ft, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        m_new = jnp.maximum(ft + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + m - m_new)
+        c = f_g * c + i_g * jnp.tanh(zt)
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    z = jnp.zeros((b, nh, hd), jnp.float32)
+    init = (z, z, z, jnp.full((b, nh, hd), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, init, wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(wx.dtype)      # (B, S, nh, hd)
+
+
+def mamba2_scan_ref(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                    D: Array) -> Array:
+    """Sequential SSM recurrence oracle.
+
+    x: (b, S, nh, hd); dt: (b, S, nh); A, D: (nh,); B, C: (b, S, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y_t = C_t . h_t + D x_t.
+    """
+    b, S, nh, hd = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (b, nh, hd), (b, nh), (b, N), (b, N)
+        alpha = jnp.exp(dtt * A)                        # (b, nh)
+        xdt = xt.astype(jnp.float32) * dtt[..., None]
+        h = h * alpha[..., None, None] + jnp.einsum(
+            "bhd,bn->bhdn", xdt, Bt.astype(jnp.float32))
+        y = jnp.einsum("bhdn,bn->bhd", h, Ct.astype(jnp.float32))
+        y = y + D[None, :, None] * xt.astype(jnp.float32)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                                    B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,94 @@
+"""sLSTM sequential-scan Pallas TPU kernel (xlstm-1.3b's hot loop).
+
+§Perf pair-1 conclusion (EXPERIMENTS.md): differentiating / running the
+sLSTM recurrence under XLA scan pays O(S) HBM traffic for recurrent-weight
+reads and per-step state. This kernel is the structural fix on TPU: grid
+(batch, heads, S/block_t) with the time axis innermost sequential — the
+per-head recurrent matrix R (hd, 4*hd) block has a constant index along
+the time axis, so Pallas keeps it resident in VMEM across all time steps,
+and the (h, c, n, m) state lives in VMEM scratch.  Per (b, h) program the
+HBM traffic is R once + the input projections streamed once — vs R x S
+under the XLA lowering.
+
+Gating follows repro.models.xlstm.slstm_step exactly (exponential
+input/forget gates with the m stabilizer); the oracle is
+``repro.kernels.ref.slstm_scan_ref``."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_T = 64
+
+
+def _slstm_kernel(wx_ref, r_ref, h_out_ref, h_scr, c_scr, n_scr, m_scr, *,
+                  block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+
+    r = r_ref[0].astype(jnp.float32)            # (hd, 4*hd), VMEM-resident
+    for t in range(block_t):
+        wx_t = wx_ref[0, 0, 0, t].astype(jnp.float32)       # (4, hd)
+        rec = jax.lax.dot_general(h_scr[...], r, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        rec = rec.reshape(4, -1)                             # (4, hd)
+        pre = wx_t + rec
+        zt, it_, ft, ot = pre[0], pre[1], pre[2], pre[3]
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(ft + m_prev, it_)
+        i_g = jnp.exp(it_ - m_new)
+        f_g = jnp.exp(ft + m_prev - m_new)
+        c = f_g * c_scr[0] + i_g * jnp.tanh(zt)
+        n = f_g * n_scr[0] + i_g
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        h_scr[...] = h[None]
+        c_scr[...] = c[None]
+        n_scr[...] = n[None]
+        m_scr[...] = m_new[None]
+        h_out_ref[0, 0, 0, t] = h.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def slstm_scan(wx: Array, r: Array, *, block_t: int = DEFAULT_BLOCK_T,
+               interpret: bool = True) -> Array:
+    """wx: (B, S, 4, nh, hd) pre-projected gate inputs [z, i, f, o];
+    r: (nh, hd, 4*hd) per-head recurrent weights (gate-major output:
+    columns [z | i | f | o], each hd wide).  Returns h: (B, S, nh, hd)."""
+    b, s, four, nh, hd = wx.shape
+    assert four == 4
+    bt = min(block_t, s)
+    while s % bt:
+        bt //= 2
+    grid = (b, nh, s // bt)
+    # (B, nh, S/bt, bt, 4, hd) layout so the time axis is grid-sequential
+    wxl = wx.transpose(0, 3, 1, 2, 4).reshape(b, nh, s // bt, bt, 4, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_slstm_kernel, block_t=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bt, 4, hd),
+                         lambda ib, ih, it: (ib, ih, it, 0, 0, 0)),
+            pl.BlockSpec((1, hd, 4 * hd), lambda ib, ih, it: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bt, hd),
+                               lambda ib, ih, it: (ib, ih, it, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, s // bt, bt, hd), wx.dtype),
+        scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32)] * 4,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(wxl, r)
+    return out.reshape(b, nh, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh and extract roofline terms (DESIGN.md §5, EXPERIMENTS.md
+§Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape train_4k --mesh single --out reports/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per pair this records compiled.memory_analysis() / cost_analysis() and
+writes a JSON artifact with:
+  * per-device HLO FLOPs + bytes accessed (cost_analysis),
+  * per-device collective bytes by op kind (parsed from the partitioned
+    HLO: all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand sizes),
+  * memory_analysis fields (argument/output/temp/peak bytes per device),
+  * the three roofline terms vs TPU v5e (197 bf16 TFLOP/s, 819 GB/s HBM,
+    ~50 GB/s/link ICI) and the dominant term,
+  * MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve) and the
+    useful-compute ratio.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import arg_shardings, input_specs, make_plan, make_step
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# long_500k applicability (DESIGN.md §5)
+LONG_OK = {"zamba2-7b", "xlstm-1.3b", "h2o-danube-1.8b"}
+
+
+def _shape_bytes(tok: str) -> int:
+    """'bf16[16,512,128]' -> bytes."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in partitioned HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # op lines look like:  %x = bf16[..] all-gather(bf16[..] %a, ...), ...
+    pat = re.compile(
+        r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(([^)]*)\)")
+    operand_pat = re.compile(r"([a-z0-9]+\[[0-9,]*\])")
+    for m in pat.finditer(hlo_text):
+        kind, operands = m.group(1), m.group(2)
+        total = sum(_shape_bytes(t) for t in operand_pat.findall(operands))
+        out[kind] += total
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def _flatten_args(plan, specs, shardings):
+    if plan.kind == "train":
+        return ((specs["state"], specs["batch"]),
+                (shardings["state"], shardings["batch"]))
+    return ((specs["params"], specs["batch"], specs["cache"]),
+            (shardings["params"], shardings["batch"], shardings["cache"]))
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "ok": False}
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        rec["skipped"] = ("full-attention arch: 524288-token KV cache "
+                          "infeasible; no SWA variant (DESIGN.md §5)")
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # one client group per data shard (pod x data for multi-pod)
+    n_clients = int(np.prod([v for k, v in mesh.shape.items()
+                             if k != "model"]))
+    plan = make_plan(cfg, shape, n_clients=n_clients)
+    step = make_step(plan, mesh)
+    specs = input_specs(plan)
+    shardings = arg_shardings(plan, mesh, specs)
+    args, arg_sh = _flatten_args(plan, specs, shardings)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=arg_sh)
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = hlo_analyze(hlo)   # trip-count-aware (see hlo_cost.py)
+    hlo_dir = os.environ.get("REPRO_HLO_DIR")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    flops = float(ana["flops"])
+    bytes_acc = float(ana["traffic_bytes"])
+    coll_bytes = float(ana["collective_total_bytes"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * n_active * tokens
+    model_flops_per_dev = model_flops / n_dev
+
+    rec.update({
+        "ok": True,
+        "devices": n_dev,
+        "mesh_shape": dict(mesh.shape),
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "per_device": {
+            "hlo_flops": flops,
+            "hlo_bytes_accessed": bytes_acc,
+            "collective": {"bytes": ana["collective_bytes"],
+                           "total_bytes": coll_bytes},
+            "xla_cost_analysis": {"flops_body_once": float(
+                cost.get("flops", 0.0)),
+                "bytes_body_once": float(cost.get("bytes accessed", 0.0))},
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+        },
+        "roofline": {**terms, "dominant": dominant.replace("_s", "")},
+        "model_flops_per_device": model_flops_per_dev,
+        "useful_compute_ratio": (model_flops_per_dev / flops
+                                 if flops else 0.0),
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok") or "skipped" in json.load(
+                                open(path)):
+                            print(f"[skip] {tag}")
+                            continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_pair(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001 — record the failure
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single", "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                if rec.get("ok"):
+                    r = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['per_device']['hlo_flops']:.3e} "
+                          f"terms(c/m/x)={r['compute_s']:.4f}/"
+                          f"{r['memory_s']:.4f}/{r['collective_s']:.4f}s "
+                          f"dominant={r['dominant']}", flush=True)
+                elif "skipped" in rec:
+                    print(f"  skipped: {rec['skipped']}", flush=True)
+                else:
+                    print(f"  FAILED: {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""Trip-count-aware cost analysis over partitioned HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body
+(i.e. every ``lax.scan``-ed layer stack) exactly once, so a 48-layer model
+reports ~1-layer FLOPs — useless for roofline work.  This module parses
+``compiled.as_text()`` into computations, recovers loop trip counts from
+the ``while`` condition's comparison constant, and rolls costs up from the
+entry computation:
+
+  * FLOPs: ``dot`` ops (2 x prod(result dims) x prod(contracting dims)),
+    including dots inside fusions;
+  * HBM traffic: sum of operand+result bytes of *top-level* ops (fusion
+    internals excluded — the fusion op's own operands/results are the real
+    HBM traffic);
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), operand sizes, loop-scaled.
+
+The result is a per-device cost (the partitioned module is the per-device
+program).  Caveats recorded in EXPERIMENTS.md: fusion boundaries here come
+from the CPU backend, and elementwise FLOPs are not counted (dots dominate
+every model in this study)."""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<type>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)(?P<attrs>.*)$")
+
+
+def _split_toplevel(s: str, sep: str = ",") -> list[str]:
+    """Split on separators not nested in (), {}, []."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == sep and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # name -> type string
+    is_fusion_body: bool = False
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: dict = field(default_factory=lambda: {
+        k: 0.0 for k in COLLECTIVE_KINDS})
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.traffic += other.traffic
+        for k in COLLECTIVE_KINDS:
+            self.collectives[k] += other.collectives[k]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.traffic * f,
+                    {k: v * f for k, v in self.collectives.items()})
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+_OPERAND_SPLIT = re.compile(r",\s*(?![^{]*\})")
+_REF_RE = re.compile(r"%?([\w\.\-]+)$")
+
+
+def _parse_header(stripped: str) -> tuple[str, dict] | None:
+    """Parse 'ENTRY %name (p: T, ...) -> T {' (types may be tuples)."""
+    pre = stripped.rsplit("->", 1)[0]
+    i = pre.find("(")
+    if i < 0:
+        return None
+    name = pre[:i].strip()
+    if name.startswith("ENTRY"):
+        name = name[len("ENTRY"):].strip()
+    name = name.lstrip("%")
+    if not name:
+        return None
+    j = pre.rfind(")")
+    params = {}
+    for pdef in _split_toplevel(pre[i + 1: j]):
+        if ":" in pdef:
+            pname, ptype = pdef.split(":", 1)
+            params[pname.strip().lstrip("%")] = ptype.strip()
+    return name, params
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        stripped = comment_re.sub("", line).strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("(")[0]:
+            hdr = _parse_header(stripped)
+            if hdr:
+                cur = Computation(hdr[0])
+                cur.symbols.update(hdr[1])
+                if stripped.startswith("ENTRY"):
+                    entry_name = cur.name
+                comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        operands = []
+        for tok in _split_toplevel(m.group("operands")):
+            tok = tok.strip()
+            if not tok:
+                continue
+            r = _REF_RE.search(tok.split(" ")[-1])
+            if r:
+                operands.append(r.group(1))
+        op = Op(m.group("name"), m.group("type"), m.group("op"), operands,
+                m.group("attrs"), stripped)
+        cur.symbols[op.name] = op.type_str
+        cur.ops.append(op)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _attr_comp(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _attr_comp_list(attrs: str, key: str) -> list[str]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    result_elems = 1
+    for d in _shape_dims(op.type_str):
+        result_elems *= d
+    lhs_type = comp.symbols.get(op.operands[0], "") if op.operands else ""
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    result_elems = 1
+    for d in _shape_dims(op.type_str):
+        result_elems *= d
+    rhs_type = comp.symbols.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    rhs_dims = _shape_dims(rhs_type)
+    if not rhs_dims:
+        return 0.0
+    # kernel: spatial... x in_ch x out_ch (last dim = output features)
+    k = 1
+    for d in rhs_dims[:-1]:
+        k *= d
+    return 2.0 * result_elems * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant compared against in the condition."""
+    best = 1
+    for op in cond.ops:
+        if op.op == "constant" and re.match(r"[su]\d+", op.type_str):
+            m = re.search(r"constant\((-?\d+)\)", op.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    def cost(self) -> Cost:
+        if "__entry__" not in self.comps:
+            return Cost()
+        return self._comp_cost(self.comps["__entry__"].name, top=True)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str, top: bool) -> Cost:
+        key = (name, top)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[key] = total  # break cycles defensively
+        for op in comp.ops:
+            total += self._op_cost(op, comp, top)
+        return total
+
+    def _traffic(self, op: Op, comp: Computation) -> float:
+        rb = _type_bytes(op.type_str)
+        obs = [_type_bytes(comp.symbols.get(o, "")) for o in op.operands]
+        in_place = "dynamic-update-slice" in op.name \
+            or op.op == "dynamic-update-slice"
+        if op.op == "fusion" or in_place:
+            # In-place update heuristic: scan-carried accumulators updated
+            # via (possibly bitcast-wrapped) fused dynamic-update-slice are
+            # buffer-aliased by XLA — real HBM traffic is the update region,
+            # approximated by the non-accumulator operands (read + write).
+            # Detect by fusion name or by an operand matching the result
+            # byte size.
+            for i, ob in enumerate(obs):
+                if (ob == rb or in_place and ob == max(obs, default=0)) \
+                        and rb > 1 << 20:
+                    others = sum(obs) - ob
+                    return float(2 * others)
+        if op.op == "dynamic-slice" and obs:
+            return float(2 * rb)   # reads only the slice region
+        return float(rb + sum(obs))
+
+    def _op_cost(self, op: Op, comp: Computation, top: bool) -> Cost:
+        kind = op.op
+        c = Cost()
+        base_kind = kind.replace("-start", "").replace("-done", "")
+        if base_kind in COLLECTIVE_KINDS:
+            if kind.endswith("-done"):
+                return c
+            opnds = sum(_type_bytes(comp.symbols.get(o, ""))
+                        for o in op.operands)
+            c.collectives[base_kind] += opnds
+            c.traffic += self._traffic(op, comp) if top else 0.0
+            return c
+        if kind == "dot":
+            c.flops += _dot_flops(op, comp)
+            c.traffic += self._traffic(op, comp) if top else 0.0
+            return c
+        if kind == "convolution":
+            c.flops += _conv_flops(op, comp)
+            c.traffic += self._traffic(op, comp) if top else 0.0
+            return c
+        if kind == "while":
+            body = _attr_comp(op.attrs, "body")
+            cond = _attr_comp(op.attrs, "condition")
+            # XLA annotates known trip counts in backend_config
+            m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+            if m:
+                trips = int(m.group(1))
+            else:
+                trips = _trip_count(self.comps[cond]) \
+                    if cond in self.comps else 1
+            if body:
+                c += self._comp_cost(body, True).scaled(trips)
+            if cond and cond in self.comps:
+                c += self._comp_cost(cond, False).scaled(trips)
+            return c
+        if kind == "fusion":
+            called = _attr_comp(op.attrs, "calls")
+            if called:
+                inner = self._comp_cost(called, False)
+                c.flops += inner.flops
+                for k in COLLECTIVE_KINDS:
+                    c.collectives[k] += inner.collectives[k]
+            c.traffic += self._traffic(op, comp) if top else 0.0
+            return c
+        if kind in ("call", "async-start"):
+            called = _attr_comp(op.attrs, "to_apply") \
+                or _attr_comp(op.attrs, "calls")
+            if called:
+                c += self._comp_cost(called, top)
+            return c
+        if kind == "conditional":
+            branches = _attr_comp_list(op.attrs, "branch_computations")
+            if not branches:
+                t = _attr_comp(op.attrs, "true_computation")
+                f = _attr_comp(op.attrs, "false_computation")
+                branches = [x for x in (t, f) if x]
+            if branches:
+                costs = [self._comp_cost(b, top) for b in branches]
+                # take the most expensive branch (upper bound)
+                best = max(costs, key=lambda x: x.flops + x.traffic)
+                c += best
+            return c
+        if top and kind not in ("parameter", "constant", "tuple",
+                                "get-tuple-element", "bitcast"):
+            c.traffic += self._traffic(op, comp)
+        return c
+
+
+def analyze(text: str) -> dict:
+    cost = HloCostAnalyzer(text).cost()
+    return {
+        "flops": cost.flops,
+        "traffic_bytes": cost.traffic,
+        "collective_bytes": {k: v for k, v in cost.collectives.items()},
+        "collective_total_bytes": cost.collective_bytes,
+    }

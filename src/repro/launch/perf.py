@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration harness (§Perf): re-lower a (arch x shape) pair with a
+variant dict and report the three roofline terms, so hypothesis -> change ->
+measure cycles are one command:
+
+  PYTHONPATH=src python -m repro.launch.perf --arch xlstm-1.3b \
+      --shape train_4k --variant slstm_unroll=16
+
+Variants (applied through repro.models.variants.VARIANTS):
+  slstm_unroll=N     unroll the sLSTM time scan by N (amortize R re-reads)
+  kv_replicated=1    replicate K/V projections instead of padding 8 kv
+                     heads onto 16 model ranks (kills per-chunk collectives)
+  chunked_ce=1       vocab-chunked CE/argmax — never materialize (B,S,V)
+  remat=0            disable per-layer activation checkpointing
+  fp32_probs=0      keep attention probabilities in bf16
+"""
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import arg_shardings, input_specs, make_plan, make_step
+from repro.models import variants as V
+
+
+def run_variant(arch: str, shape_name: str, variant: dict,
+                multi_pod: bool = False) -> dict:
+    V.set_variants(variant)
+    try:
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES[shape_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_clients = int(np.prod([v for k, v in mesh.shape.items()
+                                 if k != "model"]))
+        plan = make_plan(cfg, shape, n_clients=n_clients)
+        step = make_step(plan, mesh)
+        specs = input_specs(plan)
+        shardings = arg_shardings(plan, mesh, specs)
+        if plan.kind == "train":
+            args = (specs["state"], specs["batch"])
+            arg_sh = (shardings["state"], shardings["batch"])
+        else:
+            args = (specs["params"], specs["batch"], specs["cache"])
+            arg_sh = (shardings["params"], shardings["batch"],
+                      shardings["cache"])
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(step, in_shardings=arg_sh).lower(
+                *args).compile()
+        dt = time.time() - t0
+        ana = hlo_analyze(compiled.as_text())
+        mem = compiled.memory_analysis()
+        return {
+            "arch": arch, "shape": shape_name, "variant": variant,
+            "compile_s": round(dt, 1),
+            "compute_s": ana["flops"] / PEAK_FLOPS,
+            "memory_s": ana["traffic_bytes"] / HBM_BW,
+            "collective_s": ana["collective_total_bytes"] / ICI_BW,
+            "flops": ana["flops"],
+            "traffic_bytes": ana["traffic_bytes"],
+            "collective_bytes": ana["collective_bytes"],
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        }
+    finally:
+        V.set_variants({})
+
+
+def parse_variant(items):
+    out = {}
+    for it in items or []:
+        for kv in it.split(","):
+            if not kv:
+                continue
+            k, v = kv.split("=")
+            out[k] = int(v) if v.lstrip("-").isdigit() else v
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rec = run_variant(args.arch, args.shape, parse_variant(args.variant),
+                      args.multi)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("collective_bytes",)}, indent=2,
+                     default=float))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2, default=float)
+
+
+if __name__ == "__main__":
+    main()

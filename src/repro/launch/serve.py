@@ -1,0 +1,91 @@
+"""Split-inference serving launcher: batched prefill + decode through the
+bottom(client)/top(server) split — the SFL serving path on this host's
+devices with a reduced config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, smoke_config
+from repro.launch.steps import StepPlan, make_decode_step, make_prefill_step
+from repro.models import DistContext, build_model
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 32,
+          gen_tokens: int = 16, seed: int = 0, log=print):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen_tokens
+    cache = model.init_cache(batch, max_len)
+    dist = DistContext()
+    plan = StepPlan(cfg=cfg, shape=INPUT_SHAPES["decode_32k"], kind="decode",
+                    n_clients=1, per_client_batch=batch, long_context=False)
+
+    prefill = jax.jit(make_prefill_step(plan, dist))
+    decode = jax.jit(make_decode_step(plan, dist))
+
+    rng = np.random.RandomState(seed)
+    if cfg.is_encoder_decoder:
+        batch_in = {"frames": jnp.asarray(
+            rng.randn(batch, prompt_len, cfg.d_model), jnp.float32),
+            "dec_tokens": jnp.zeros((batch, 8), jnp.int32)}
+    else:
+        batch_in = {"tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+        if cfg.modality == "vision":
+            p = 8
+            batch_in["patch_embeds"] = jnp.asarray(
+                rng.randn(batch, p, cfg.d_model), jnp.float32)
+            from repro.models.rope import default_mrope_positions
+            batch_in["mrope_positions"] = default_mrope_positions(
+                batch, prompt_len + p)
+
+    t0 = time.time()
+    logits, cache = prefill(
+        {"bottom": params["bottom"], "top": params["top"]}, batch_in, cache)
+    next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    log(f"prefill: batch={batch} len={prompt_len} "
+        f"({time.time() - t0:.2f}s incl. compile)")
+
+    out_tokens = [np.asarray(next_tok)]
+    pos0 = prompt_len if not cfg.is_encoder_decoder else 8
+    t0 = time.time()
+    for i in range(gen_tokens - 1):
+        step_batch = {"tokens": next_tok[:, None],
+                      "pos": jnp.full((batch,), pos0 + i, jnp.int32)}
+        if cfg.rope_kind == "mrope":
+            p3 = jnp.full((3, batch, 1), pos0 + i, jnp.int32)
+            step_batch["mrope_positions"] = p3
+        next_tok, cache = decode(
+            {"bottom": params["bottom"], "top": params["top"]}, step_batch,
+            cache)
+        out_tokens.append(np.asarray(next_tok))
+    dt = time.time() - t0
+    toks = np.stack(out_tokens, 1)
+    log(f"decode: {gen_tokens - 1} steps in {dt:.2f}s "
+        f"({(gen_tokens - 1) * batch / max(dt, 1e-9):.1f} tok/s incl. compile)")
+    assert not np.any(np.isnan(toks.astype(np.float64)))
+    return toks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+    toks = serve(args.arch, args.batch, args.prompt_len, args.tokens)
+    print("generated token ids (first sequence):", toks[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""SemiSFL training launcher.
+
+Runs the paper's full alternating-round training loop (Alg. 1) on this
+host's devices.  The paper models train on the synthetic image task (the
+reproduction rig); the assigned transformer architectures train their
+reduced smoke variants on the synthetic LM task to keep CPU runs feasible —
+the full configs are exercised via `repro.launch.dryrun`.
+
+  PYTHONPATH=src python -m repro.launch.train --arch paper-cnn --rounds 30
+  PYTHONPATH=src python -m repro.launch.train --arch paper-cnn \
+      --baseline fedswitch --dirichlet 0.1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.checkpoint import save_state
+from repro.configs import get_config, smoke_config
+from repro.core.baselines import BASELINES, make_fedswitch_sl
+from repro.core.engine import SemiSFLSystem, make_controller
+from repro.data import (Loader, client_loaders, dirichlet_partition,
+                        make_image_dataset, train_test_split,
+                        uniform_partition)
+
+
+def build_system(name: str, cfg, **kw):
+    if name == "semisfl":
+        return SemiSFLSystem(cfg, **kw)
+    if name == "fedswitch-sl":
+        return make_fedswitch_sl(cfg, **kw)
+    return BASELINES[name](cfg, **kw)
+
+
+def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
+                 rounds: int = 30, n_labeled: int = 250,
+                 n_total: int = 2400, n_clients: int = 10,
+                 n_active: int = 5, dirichlet: float = 0.0,
+                 labeled_batch: int = 32, client_batch: int = 16,
+                 seed: int = 0, smoke: bool = True, eval_every: int = 5,
+                 k_s: int = 15, k_u: int = 4, log=print):
+    from dataclasses import replace
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    cfg = replace(cfg, semisfl=replace(
+        cfg.semisfl, k_s_init=k_s, k_u=k_u, queue_len=512,
+        observation_period=3, adaptation_window=3))
+    if cfg.arch_type != "cnn":
+        raise SystemExit("train.py drives the classification rig; "
+                         "LM-task steps are exercised via dryrun/examples")
+    ds = make_image_dataset(seed, num_classes=cfg.num_classes,
+                            n=n_total + 400, image_size=cfg.image_size)
+    train, test = train_test_split(ds, 400, seed=seed)
+    lab_idx = np.arange(n_labeled)
+    unl_idx = np.arange(n_labeled, len(train.y))
+    if dirichlet > 0:
+        parts = dirichlet_partition(seed, train.y[unl_idx], n_clients,
+                                    dirichlet)
+        parts = [unl_idx[p] for p in parts]
+    else:
+        parts = [unl_idx[p] for p in
+                 uniform_partition(seed, len(unl_idx), n_clients)]
+
+    sys_ = build_system(baseline, cfg, n_clients_per_round=n_active)
+    state = sys_.init_state(seed)
+    ctrl = make_controller(cfg, n_labeled, len(train.y))
+    lab = Loader(train, lab_idx, labeled_batch, seed)
+    cls = client_loaders(train, parts, client_batch, seed + 1)
+
+    history = []
+    for r in range(rounds):
+        t0 = time.time()
+        state, m = sys_.run_round(state, lab, cls, ctrl)
+        rec = {"round": r, "k_s": ctrl.k_s, "dt": round(time.time() - t0, 2)}
+        rec.update(m if isinstance(m, dict) else
+                   {"f_s": m.f_s, "f_u": m.f_u, "mask_rate": m.mask_rate})
+        if r % eval_every == 0 or r == rounds - 1:
+            rec["test_acc"] = sys_.evaluate(state, test.x, test.y)
+        history.append(rec)
+        log(f"[{baseline}] round {r}: " + " ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in rec.items() if k != "round"))
+    return state, history, sys_
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-cnn")
+    ap.add_argument("--baseline", default="semisfl",
+                    choices=["semisfl", "fedswitch-sl"] + list(BASELINES))
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--labeled", type=int, default=250)
+    ap.add_argument("--total", type=int, default=2400)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--active", type=int, default=5)
+    ap.add_argument("--dirichlet", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    state, history, _ = run_training(
+        arch=args.arch, baseline=args.baseline, rounds=args.rounds,
+        n_labeled=args.labeled, n_total=args.total, n_clients=args.clients,
+        n_active=args.active, dirichlet=args.dirichlet, seed=args.seed,
+        smoke=not args.full_config)
+    if args.ckpt:
+        save_state(args.ckpt, state.params,
+                   {"history": history, "arch": args.arch,
+                    "baseline": args.baseline})
+        print(f"checkpoint -> {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

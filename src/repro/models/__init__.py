@@ -1,0 +1,4 @@
+from repro.models.moe import DistContext
+from repro.models.transformer import build_model
+
+__all__ = ["DistContext", "build_model"]

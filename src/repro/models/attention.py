@@ -1,0 +1,246 @@
+"""GQA attention with RoPE/M-RoPE, QKV bias, qk-norm, sliding window, and
+KV-cache decode (ring buffer for SWA).
+
+The training/prefill path computes attention in q-chunks via ``lax.scan``
+with an online-softmax accumulator, so the (Sq, Skv) logit matrix is never
+materialized in HBM — this is the XLA-lowerable stand-in for the Pallas
+flash-attention kernel in ``repro.kernels.flash_attention`` (which is the
+TPU target for the same computation).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Params, dense_init, ones, rms_norm_headwise, zeros
+from repro.models.rope import apply_mrope, apply_rope
+
+Array = jax.Array
+
+Q_CHUNK = 256  # q-tile length for the chunked softmax scan
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache. For sliding-window attention the buffer is a ring
+    of length ``window`` and ``pos`` tracks absolute kv positions."""
+
+    k: Array          # (B, S_buf, KVH, hd)
+    v: Array          # (B, S_buf, KVH, hd)
+    pos: Array        # (B, S_buf) absolute position of each slot, -1 = empty
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  window: int, dtype) -> KVCache:
+    buf = min(window, max_len) if window else max_len
+    return KVCache(
+        k=zeros((batch, buf, n_kv, head_dim), dtype),
+        v=zeros((batch, buf, n_kv, head_dim), dtype),
+        pos=jnp.full((batch, buf), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key: Array, cfg: ArchConfig, dtype) -> Params:
+    d, h, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.head_dim or d // h
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kvh * hd, dtype),
+        "wv": dense_init(ks[2], d, kvh * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = zeros((h * hd,), dtype)
+        p["bk"] = zeros((kvh * hd,), dtype)
+        p["bv"] = zeros((kvh * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = ones((hd,), dtype)
+        p["k_norm"] = ones((hd,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _chunked_attend(q: Array, k: Array, v: Array, *, causal: bool,
+                    window: int, q_offset: int = 0) -> Array:
+    """Online-softmax attention over q-chunks.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd).  GQA via head grouping.
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, sq, kvh, g, hd)
+    kv_pos = jnp.arange(skv, dtype=jnp.int32)
+
+    n_chunks = max(1, sq // Q_CHUNK)
+    chunk = sq // n_chunks
+    qg = qg.reshape(b, n_chunks, chunk, kvh, g, hd)
+
+    def one_chunk(ci, qc):
+        # qc: (B, chunk, KVH, G, hd)
+        q_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32) + q_offset
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        from repro.models import variants
+        if variants.bf16_probs():
+            m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+            p = jnp.exp(logits - m).astype(jnp.bfloat16)
+            denom = jnp.maximum(p.sum(-1, keepdims=True),
+                                jnp.bfloat16(1e-6))
+            w = p / denom
+        else:
+            w = jax.nn.softmax(logits, axis=-1)
+        # fully-masked rows (can happen with padding) -> zeros, not NaN
+        w = jnp.where(jnp.any(mask, -1)[None, None, None, :, None], w,
+                      jnp.zeros((), w.dtype))
+        return jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+
+    if n_chunks == 1:
+        out = one_chunk(0, qg[:, 0])[:, None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qg.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)  # (B, n_chunks, chunk, KVH, G, hd)
+    return out.reshape(b, sq, h, hd)
+
+
+def _decode_attend(q: Array, cache: KVCache, cur_pos: Array,
+                   window: int) -> Array:
+    """One-token attention against the cache.
+
+    q: (B, 1, H, hd); cur_pos: (B,) absolute position of the new token.
+    """
+    b, _, h, hd = q.shape
+    kvh = cache.k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, cache.k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = cache.pos >= 0
+    valid &= cache.pos <= cur_pos[:, None]
+    if window:
+        valid &= cache.pos > (cur_pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1).astype(cache.v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cache.v)
+    return out.reshape(b, 1, h, hd)
+
+
+def cache_update(cache: KVCache, k_new: Array, v_new: Array,
+                 pos: Array) -> KVCache:
+    """Insert one token (B, 1, KVH, hd) at absolute position ``pos`` (B,)."""
+    buf = cache.k.shape[1]
+    slot = pos % buf
+    b = k_new.shape[0]
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0])
+    v = cache.v.at[bidx, slot].set(v_new[:, 0])
+    p = cache.pos.at[bidx, slot].set(pos)
+    return KVCache(k, v, p)
+
+
+def cache_prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
+    """Write a full prefix (B, S, KVH, hd) into the cache (S <= buffer)."""
+    s = k.shape[1]
+    buf = cache.k.shape[1]
+    if s > buf:  # sliding window: only the last `buf` tokens matter
+        k, v = k[:, -buf:], v[:, -buf:]
+        start = s - buf
+    else:
+        start = 0
+    pos = jnp.arange(start, start + k.shape[1], dtype=jnp.int32)
+    slot = pos % buf
+    kc = cache.k.at[:, slot].set(k)
+    vc = cache.v.at[:, slot].set(v)
+    pc = cache.pos.at[:, slot].set(jnp.broadcast_to(pos, (k.shape[0], k.shape[1])))
+    return KVCache(kc, vc, pc)
+
+
+# ---------------------------------------------------------------------------
+# Full attention module
+# ---------------------------------------------------------------------------
+
+def apply_attention(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    positions: Array,                  # (B, S) or (3, B, S) for mrope
+    mode: str = "train",               # train | prefill | decode
+    cache: Optional[KVCache] = None,
+    causal: bool = True,
+    window_override: Optional[int] = None,
+    kv_override: Optional[tuple[Array, Array]] = None,  # cross-attention
+) -> tuple[Array, Optional[KVCache]]:
+    b, s, d = x.shape
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.head_dim or d // h
+    window = cfg.sliding_window if window_override is None else window_override
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, h, hd)
+
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, s, kvh, hd)
+        v = v.reshape(b, s, kvh, hd)
+
+    if "q_norm" in p:
+        q = rms_norm_headwise(p["q_norm"], q)
+        if kv_override is None:
+            k = rms_norm_headwise(p["k_norm"], k)
+
+    use_rope = cfg.rope_kind != "none" and kv_override is None
+    if use_rope:
+        if cfg.rope_kind == "mrope":
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+
+    new_cache = cache
+    if mode == "decode" and kv_override is None:
+        assert cache is not None
+        cur_pos = positions[-1] if positions.ndim > 1 and positions.shape[0] == 3 \
+            else positions
+        cur_pos = cur_pos.reshape(b, -1)[:, -1]
+        new_cache = cache_update(cache, k, v, cur_pos)
+        out = _decode_attend(q, new_cache, cur_pos, window)
+    elif mode == "decode":  # cross-attention decode: static kv
+        out = _chunked_attend(q, k, v, causal=False, window=0)
+    else:
+        out = _chunked_attend(q, k, v, causal=causal, window=window)
+        if mode == "prefill" and cache is not None and kv_override is None:
+            new_cache = cache_prefill(cache, k, v)
+
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return y, new_cache

@@ -1,0 +1,122 @@
+"""The paper's own benchmark models (customized CNN / AlexNet / VGG13 /
+VGG16) as split CNN classifiers.
+
+Structure: a stack of 3x3 conv+ReLU layers (``cfg.cnn_channels``) with 2x2
+max-pool at channel-width changes and after the last conv, followed by the
+FC stack (``cfg.cnn_fc``) and the classifier.  The SFL split index counts
+conv layers: ``bottom`` = convs[:split] (client), ``top`` = the rest
+(server) — matching the paper's choices (CNN@2, AlexNet@5, VGG13@10,
+VGG16@13) where clients hold the convolutional feature extractor and the
+parameter-heavy FC layers stay on the PS.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Params, dense_init, zeros
+from repro.models.moe import DistContext
+
+Array = jax.Array
+
+
+def _pool_at(channels) -> list[bool]:
+    out = []
+    for i, c in enumerate(channels):
+        last = i == len(channels) - 1
+        change = (not last) and channels[i + 1] != c
+        out.append(last or change)
+    return out
+
+
+def _conv_init(key, cin, cout, dtype):
+    w = jax.random.normal(key, (3, 3, cin, cout), jnp.float32)
+    w = w * (2.0 / (9 * cin)) ** 0.5
+    return {"w": w.astype(dtype), "b": zeros((cout,), dtype)}
+
+
+def _conv_apply(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + p["b"])
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+class CNNModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.split = min(cfg.split_layer, len(cfg.cnn_channels))
+        self.pool_at = _pool_at(cfg.cnn_channels)
+
+    # -- shape bookkeeping ---------------------------------------------------
+    def _feat_shape(self, upto: int):
+        hw, c = self.cfg.image_size, 3
+        for i in range(upto):
+            c = self.cfg.cnn_channels[i]
+            if self.pool_at[i]:
+                hw //= 2
+        return hw, c
+
+    def init(self, rng: Array) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        n = len(cfg.cnn_channels)
+        keys = jax.random.split(rng, n + len(cfg.cnn_fc) + 2)
+        convs = []
+        cin = 3
+        for i, cout in enumerate(cfg.cnn_channels):
+            convs.append(_conv_init(keys[i], cin, cout, dt))
+            cin = cout
+        bottom = {"convs": convs[: self.split]}
+        hw, c = self._feat_shape(n)
+        feat = hw * hw * c
+        fcs = []
+        for j, width in enumerate(cfg.cnn_fc):
+            fcs.append({"w": dense_init(keys[n + j], feat, width, dt),
+                        "b": zeros((width,), dt)})
+            feat = width
+        top = {
+            "convs": convs[self.split:],
+            "fcs": fcs,
+            "cls": {"w": dense_init(keys[-1], feat, cfg.num_classes, dt),
+                    "b": zeros((cfg.num_classes,), dt)},
+        }
+        return {"bottom": bottom, "top": top}
+
+    def init_cache(self, batch: int, max_len: int, long_context: bool = False):
+        return {"bottom": None, "top": None}
+
+    def bottom_apply(self, params: Params, batch_inputs: dict, *,
+                     mode: str = "train", cache=None,
+                     dist: DistContext = DistContext()):
+        x = batch_inputs["images"].astype(jnp.dtype(self.cfg.dtype))
+        for i, p in enumerate(params["convs"]):
+            x = _conv_apply(p, x)
+            if self.pool_at[i]:
+                x = _maxpool(x)
+        return x, None, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+    def top_apply(self, params: Params, features: Array, *, extras: dict,
+                  mode: str = "train", cache=None,
+                  dist: DistContext = DistContext()):
+        x = features
+        for i, p in enumerate(params["convs"]):
+            j = self.split + i
+            x = _conv_apply(p, x)
+            if self.pool_at[j]:
+                x = _maxpool(x)
+        b = x.shape[0]
+        x = x.reshape(b, -1)
+        for p in params["fcs"]:
+            x = jax.nn.relu(x @ p["w"] + p["b"])
+        logits = x @ params["cls"]["w"] + params["cls"]["b"]
+        return ({"logits": logits, "hidden": x,
+                 "aux_loss": extras.get("aux_loss", 0.0)}, None)

@@ -1,0 +1,100 @@
+"""Shared building blocks: initializers, norms, activations, MLPs.
+
+All models in this framework are pure-functional: parameters are nested
+dicts of ``jnp.ndarray`` and every module exposes ``init_*`` / ``apply_*``
+pairs.  Repeated layers stack their parameters along a leading axis and are
+driven by ``jax.lax.scan`` so the lowered HLO is O(1) in depth — essential
+for the 512-device dry-run compiles on this container.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype) -> Array:
+    return jnp.ones(shape, dtype)
+
+
+def stack_layer_params(keys: Array, init_one: Callable[[Array], Params]) -> Params:
+    """vmap an init function over a leading layer axis of rng keys."""
+    return jax.vmap(init_one)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key: Array, d: int, kind: str, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": ones((d,), dtype)}
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def apply_norm(p: Params, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_headwise(scale: Array, x: Array, eps: float = 1e-6) -> Array:
+    """Per-head RMSNorm over the trailing head_dim (qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(key: Array, d: int, d_ff: int, gated: bool, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: Array, act: str, gated: bool) -> Array:
+    f = _ACTS[act]
+    h = x @ p["up"]
+    if gated:
+        h = f(x @ p["gate"]) * h
+    else:
+        h = f(h)
+    return h @ p["down"]

@@ -1,0 +1,175 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV states are compressed into a ``kv_lora_rank`` latent (plus a shared
+rope-carrying key slice) which is what the decode cache stores — the memory
+win that defines MLA.  Decode uses the *absorbed* formulation: the
+up-projections W_uk / W_uv are folded into the query / output sides so each
+step works directly in latent space and never decompresses the cache:
+
+    logits = (q_nope @ W_uk) . latent  +  q_rope . k_rope
+    out    = (attn @ latent) @ W_uv
+
+Train/prefill decompresses (cheaper at large S since the q side would pay
+(nope -> lora) per token anyway, and XLA fuses the decompression matmuls).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import Q_CHUNK
+from repro.models.common import Params, apply_norm, dense_init, init_norm, zeros
+from repro.models.rope import apply_rope
+
+Array = jax.Array
+
+
+class MLACache(NamedTuple):
+    latent: Array   # (B, S, kv_lora_rank)
+    k_rope: Array   # (B, S, qk_rope_head_dim) -- shared across heads
+    length: Array   # (B,) filled length
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: ArchConfig, dtype) -> MLACache:
+    return MLACache(
+        latent=zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def init_mla(key: Array, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq_a": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": init_norm(ks[0], cfg.q_lora_rank, "rmsnorm", dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * (nope + rdim), dtype),
+        "wkv_a": dense_init(ks[2], d, cfg.kv_lora_rank + rdim, dtype),
+        "kv_norm": init_norm(ks[2], cfg.kv_lora_rank, "rmsnorm", dtype),
+        # stored split for the absorbed decode path
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank, h * nope, dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank, h * vdim, dtype),
+        "wo": dense_init(ks[5], h * vdim, d, dtype),
+    }
+    return p
+
+
+def _project_q(p: Params, cfg: ArchConfig, x: Array, positions: Array):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm") @ p["wq_b"]
+    q = q.reshape(b, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: Params, cfg: ArchConfig, x: Array, positions: Array):
+    b, s, _ = x.shape
+    rdim = cfg.qk_rope_head_dim
+    kv = x @ p["wkv_a"]
+    latent = apply_norm(p["kv_norm"], kv[..., :cfg.kv_lora_rank], "rmsnorm")
+    k_rope = kv[..., cfg.kv_lora_rank:].reshape(b, s, 1, rdim)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return latent, k_rope
+
+
+def apply_mla(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    positions: Array,
+    mode: str = "train",
+    cache: Optional[MLACache] = None,
+) -> tuple[Array, Optional[MLACache]]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rdim)
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    latent, k_rope = _project_kv_latent(p, cfg, x, positions)
+
+    if mode == "decode":
+        assert cache is not None
+        cur_pos = positions.reshape(b, -1)[:, -1]
+        bidx = jnp.arange(b)
+        cache = MLACache(
+            latent=cache.latent.at[bidx, cur_pos].set(latent[:, 0]),
+            k_rope=cache.k_rope.at[bidx, cur_pos].set(k_rope[:, 0]),
+            length=jnp.maximum(cache.length, cur_pos + 1),
+        )
+        # absorbed attention in latent space
+        w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, nope)
+        q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk)   # (B,H,lora)
+        logits = jnp.einsum("bhl,bsl->bhs", q_lat, cache.latent,
+                            preferred_element_type=jnp.float32)
+        logits += jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], cache.k_rope,
+                             preferred_element_type=jnp.float32)
+        logits *= scale
+        kv_pos = jnp.arange(cache.latent.shape[1], dtype=jnp.int32)
+        mask = kv_pos[None, :] <= cur_pos[:, None]
+        logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1).astype(cache.latent.dtype)
+        out_lat = jnp.einsum("bhs,bsl->bhl", w, cache.latent)    # (B,H,lora)
+        w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, vdim)
+        out = jnp.einsum("bhl,lhv->bhv", out_lat, w_uv)
+        y = out.reshape(b, 1, h * vdim) @ p["wo"]
+        return y, cache
+
+    # train / prefill: decompress latent -> per-head K_nope, V
+    k_nope = (latent @ p["w_uk"]).reshape(b, s, h, nope)
+    v = (latent @ p["w_uv"]).reshape(b, s, h, vdim)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rdim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+
+    # chunked causal softmax (same online pattern as attention.py)
+    n_chunks = max(1, s // Q_CHUNK)
+    chunk = s // n_chunks
+    qc = q.reshape(b, n_chunks, chunk, h, nope + rdim).swapaxes(0, 1)
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+
+    def one_chunk(args):
+        ci, qx = args
+        q_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        logits = jnp.einsum("bqhd,bshd->bhqs", qx, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        from repro.models import variants
+        if variants.bf16_probs():
+            m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+            p = jnp.exp(logits - m).astype(jnp.bfloat16)
+            w = (p / jnp.maximum(p.sum(-1, keepdims=True),
+                                 jnp.bfloat16(1e-6))).astype(v.dtype)
+        else:
+            w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bshd->bqhd", w, v)
+
+    if n_chunks == 1:
+        out = one_chunk((jnp.int32(0), qc[0]))[:, None]
+    else:
+        out = jax.lax.map(one_chunk, (jnp.arange(n_chunks), qc))
+    out = out.swapaxes(0, 1).reshape(b, s, h * vdim)
+    y = out @ p["wo"]
+
+    new_cache = cache
+    if mode == "prefill" and cache is not None:
+        smax = cache.latent.shape[1]
+        lat = latent if s <= smax else latent[:, -smax:]
+        kr = k_rope if s <= smax else k_rope[:, -smax:]
+        new_cache = MLACache(
+            latent=cache.latent.at[:, : lat.shape[1]].set(lat),
+            k_rope=cache.k_rope.at[:, : kr.shape[1]].set(kr),
+            length=jnp.full((b,), lat.shape[1], jnp.int32),
+        )
+    return y, new_cache

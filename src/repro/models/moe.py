@@ -1,0 +1,236 @@
+"""Mixture-of-Experts: dense-mixture reference path and an expert-parallel
+``shard_map`` path with all_to_all dispatch (the TPU production path).
+
+Layout (EP path, DESIGN.md §3):
+  * tokens are sharded over the data axes AND (within the layer) over the
+    model axis — each model rank routes a distinct token chunk,
+  * experts are sharded over the model axis (rank j owns experts
+    [j*E_loc, (j+1)*E_loc)),
+  * dispatch: local top-k -> stable sort by expert -> scatter into a fixed
+    capacity (E, C, d) buffer -> all_to_all over the model axis -> each rank
+    runs its local experts -> all_to_all back -> weighted combine ->
+    all_gather of token chunks.
+
+Capacity dropping follows the Switch rule with ``capacity_factor``; dropped
+assignments contribute zero (the residual stream and shared/dense branches
+still see every token), exactly like production TPU MoE stacks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.common import Params, apply_mlp, dense_init, init_mlp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class DistContext:
+    """Distribution context threaded through model apply functions."""
+
+    mesh: Optional[Mesh] = None
+    data_axes: tuple = ()            # e.g. ("pod", "data") or ("data",)
+    model_axis: Optional[str] = None
+    moe_impl: str = "dense"          # dense | ep
+    long_context: bool = False       # serve-time long-ctx mode (DESIGN §5)
+    # per-layer activation checkpointing for train steps: backward
+    # recomputes the block instead of storing attention weights /
+    # expert activations stacked over the layer scan.
+    remat: bool = True
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+def init_moe(key: Array, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    ekeys = jax.random.split(ks[0], m.num_experts)
+    p: Params = {
+        "router": dense_init(ks[1], d, m.num_experts, jnp.float32),
+        "experts": jax.vmap(
+            lambda k: init_mlp(k, d, m.d_ff_expert, cfg.mlp_gated, dtype)
+        )(ekeys),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[2], d, m.d_ff_expert * m.num_shared_experts,
+                               cfg.mlp_gated, dtype)
+    if m.d_ff_dense_residual:
+        p["dense_residual"] = init_mlp(ks[3], d, m.d_ff_dense_residual,
+                                       cfg.mlp_gated, dtype)
+    return p
+
+
+def _routing(router: Array, x: Array, m: MoEConfig):
+    """x: (T, d) -> (weights (T, k), idx (T, k), probs (T, E))."""
+    logits = x.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx, probs
+
+
+def aux_load_balance_loss(probs: Array, idx: Array, num_experts: int) -> Array:
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx, num_experts).sum(1), axis=0)
+    return num_experts * jnp.sum(me * ce)
+
+
+def _common_branches(p: Params, cfg: ArchConfig, x2d: Array) -> Array:
+    out = jnp.zeros_like(x2d)
+    if "shared" in p:
+        out += apply_mlp(p["shared"], x2d, cfg.act, cfg.mlp_gated)
+    if "dense_residual" in p:
+        out += apply_mlp(p["dense_residual"], x2d, cfg.act, cfg.mlp_gated)
+    return out
+
+
+def _act(h: Array, act: str) -> Array:
+    return jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+
+
+# ---------------------------------------------------------------------------
+# Dense-mixture reference (oracle; also used at decode-sized token counts)
+# ---------------------------------------------------------------------------
+
+def apply_moe_dense(p: Params, cfg: ArchConfig, x: Array) -> tuple[Array, Array]:
+    """x: (B, S, d). Computes every expert on every token, combines with
+    top-k weights. Exact (no capacity drops) -> oracle for the EP path."""
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    x2d = x.reshape(-1, d)
+    weights, idx, probs = _routing(p["router"], x2d, m)
+    combine = jnp.zeros((x2d.shape[0], m.num_experts), jnp.float32)
+    combine = jax.vmap(lambda c, i, w: c.at[i].add(w))(combine, idx, weights)
+    e = p["experts"]
+    h = jnp.einsum("td,edf->tef", x2d, e["up"])
+    if cfg.mlp_gated:
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", x2d, e["gate"])) * h
+    else:
+        h = _act(h, cfg.act)
+    y = jnp.einsum("tef,efd->ted", h, e["down"])
+    out = jnp.einsum("ted,te->td", y, combine.astype(y.dtype))
+    out += _common_branches(p, cfg, x2d)
+    aux = aux_load_balance_loss(probs, idx, m.num_experts)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel shard_map path
+# ---------------------------------------------------------------------------
+
+def _segment_positions(sorted_ids: Array) -> Array:
+    """Rank of each element within its (sorted, contiguous) segment."""
+    n = sorted_ids.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_ids[1:] != sorted_ids[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, idx, 0))
+    return idx - seg_start
+
+
+def _dispatch_local(x: Array, idx: Array, m: MoEConfig, capacity: int):
+    """Scatter local tokens into a fixed-capacity (E, C, d) buffer.
+
+    Returns (buffer, slot (T, k)) where slot == E*C marks a dropped
+    assignment."""
+    t, d = x.shape
+    flat_e = idx.reshape(-1).astype(jnp.int32)                 # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_pos = _segment_positions(sorted_e)
+    oob = m.num_experts * capacity
+    slot_sorted = jnp.where(seg_pos < capacity,
+                            sorted_e * capacity + seg_pos, oob)
+    slot = jnp.zeros((t * m.top_k,), jnp.int32).at[order].set(slot_sorted)
+    token_of = order // m.top_k
+    buf = jnp.zeros((oob + 1, d), x.dtype).at[slot_sorted].set(x[token_of])
+    return buf[:-1].reshape(m.num_experts, capacity, d), slot.reshape(t, m.top_k)
+
+
+def apply_moe_ep(p: Params, cfg: ArchConfig, x: Array,
+                 dist: DistContext) -> tuple[Array, Array]:
+    """Expert-parallel MoE. x: (B, S, d) sharded (data..., None, None)."""
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    msize = dist.model_size
+    if dist.mesh is None or msize == 1 or m.num_experts % msize != 0:
+        return apply_moe_dense(p, cfg, x)
+    maxis = dist.model_axis
+    e_local = m.num_experts // msize
+    all_axes = tuple(dist.data_axes) + (maxis,)
+
+    def local_fn(router, experts, xl):
+        # xl: (B_loc, S, d); replicated over the model axis.
+        b_loc = xl.shape[0]
+        tl = xl.reshape(-1, d)
+        t_all = tl.shape[0]
+        t_chunk = -(-t_all // msize)
+        if t_chunk * msize != t_all:
+            tl = jnp.pad(tl, ((0, t_chunk * msize - t_all), (0, 0)))
+        midx = jax.lax.axis_index(maxis)
+        xc = jax.lax.dynamic_slice_in_dim(tl, midx * t_chunk, t_chunk)
+
+        weights, idx, probs = _routing(router, xc, m)
+        capacity = max(8, int(m.capacity_factor * t_chunk * m.top_k
+                              / m.num_experts))
+        capacity = -(-capacity // 8) * 8
+        buf, slot = _dispatch_local(xc, idx, m, capacity)       # (E, C, d)
+
+        # tokens -> expert owners: split experts across ranks, stack sources
+        # along capacity.  (E, C, d) -> (E_loc, msize*C, d), source-major.
+        buf = jax.lax.all_to_all(buf, maxis, split_axis=0, concat_axis=1,
+                                 tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf, experts["up"])
+        if cfg.mlp_gated:
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, experts["gate"])) * h
+        else:
+            h = _act(h, cfg.act)
+        y = jnp.einsum("ecf,efd->ecd", h, experts["down"])
+        # inverse all_to_all: back to (E, C, d) in global expert order
+        y = jax.lax.all_to_all(y, maxis, split_axis=1, concat_axis=0,
+                               tiled=True)
+        y = y.reshape(m.num_experts * capacity, d)
+        y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)])    # OOB -> 0
+        out_c = jnp.einsum("tkd,tk->td", y[slot], weights.astype(y.dtype))
+        # reassemble the full local token set across the model axis
+        out = jax.lax.all_gather(out_c, maxis, axis=0, tiled=True)[:t_all]
+        aux = jax.lax.pmean(aux_load_balance_loss(probs, idx, m.num_experts),
+                            all_axes)
+        return out.reshape(b_loc, s, d), aux
+
+    data_spec = tuple(dist.data_axes) or None
+    routed, aux = shard_map(
+        local_fn,
+        mesh=dist.mesh,
+        in_specs=(P(), P(maxis), P(data_spec, None, None)),
+        out_specs=(P(data_spec, None, None), P()),
+        check_vma=False,
+    )(p["router"], p["experts"], x)
+
+    out = routed + _common_branches(p, cfg, x.reshape(-1, d)).reshape(b, s, d)
+    return out, aux
+
+
+def apply_moe(p: Params, cfg: ArchConfig, x: Array,
+              dist: Optional[DistContext] = None) -> tuple[Array, Array]:
+    dist = dist or DistContext()
+    if dist.moe_impl == "ep":
+        return apply_moe_ep(p, cfg, x, dist)
+    return apply_moe_dense(p, cfg, x)

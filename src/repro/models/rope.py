@@ -1,0 +1,74 @@
+"""Rotary position embeddings: standard, partial (stablelm), and M-RoPE
+(qwen2-vl).
+
+M-RoPE splits the rotary dims into (temporal, height, width) sections and
+indexes each section's table with its own position-id plane.  Text-only
+tokens simply repeat the same position in all three planes, which reduces
+exactly to standard RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(rot_dim: int, theta: float) -> Array:
+    """Inverse frequencies for a rotary table. Shape (rot_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def rope_angles(positions: Array, rot_dim: int, theta: float) -> Array:
+    """positions (..., S) -> angles (..., S, rot_dim // 2)."""
+    inv = rope_freqs(rot_dim, theta)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def _rotate(x: Array, cos: Array, sin: Array) -> Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: Array, positions: Array, theta: float, rope_pct: float = 1.0) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int. Partial rotary via rope_pct."""
+    hd = x.shape[-1]
+    rot_dim = int(hd * rope_pct)
+    rot_dim -= rot_dim % 2
+    if rot_dim == 0:
+        return x
+    ang = rope_angles(positions, rot_dim, theta)          # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)     # (B, S, 1, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    return jnp.concatenate([_rotate(x_rot, cos, sin), x_pass], axis=-1)
+
+
+def apply_mrope(x: Array, positions_3d: Array, theta: float,
+                sections: tuple[int, ...]) -> Array:
+    """M-RoPE. x: (B, S, H, hd); positions_3d: (3, B, S) int planes
+    (temporal, height, width); sections: per-plane half-dim sizes summing to
+    hd // 2."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)                            # (hd/2,)
+    # angles per plane: (3, B, S, hd/2)
+    ang = positions_3d[..., None].astype(jnp.float32) * inv
+    # select the plane for each frequency slot: ang[plane_of_slot[d], b, s, d]
+    plane_of_slot = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                               total_repeat_length=hd // 2)  # (hd/2,)
+    ang = jnp.einsum("pbsd,dp->bsd", ang, jax.nn.one_hot(plane_of_slot, 3))
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)
+
+
+def default_positions(batch: int, seq: int, offset: Array | int = 0) -> Array:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.asarray(offset, jnp.int32)
+
+
+def default_mrope_positions(batch: int, seq: int, offset: Array | int = 0) -> Array:
+    """Text-only 3D positions: all planes equal -> reduces to RoPE."""
+    p = default_positions(batch, seq, offset)
+    p = jnp.broadcast_to(p, (batch, seq))
+    return jnp.stack([p, p, p], axis=0)

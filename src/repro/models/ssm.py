@@ -1,0 +1,205 @@
+"""Mamba2 selective-state-space layer (arXiv:2405.21060 form) for zamba2.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk terms are
+computed in matmul (MXU-friendly) form *inside* the same ``lax.scan`` that
+carries the inter-chunk state, so peak memory is O(B * c^2 * nh) per step
+instead of O(B * S * c * nh) — this matters at prefill_32k.  Decode is the
+O(1) recurrent update.  ``repro.kernels.mamba2_scan`` is the Pallas target
+for the same computation; this module is the XLA-lowerable stand-in and the
+oracle's substrate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.common import Params, apply_norm, dense_init, init_norm, zeros
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array    # (B, conv_width - 1, conv_channels) rolling input window
+    state: Array   # (B, nh, hd, N) recurrent SSM state
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return s, d_in, nh, conv_ch
+
+
+def init_ssm_cache(batch: int, cfg: ArchConfig, dtype) -> SSMCache:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    return SSMCache(
+        conv=zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        state=zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    )
+
+
+def init_ssm(key: Array, cfg: ArchConfig, dtype) -> Params:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        # -> [z (d_in), x (d_in), B (N), C (N), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * s.state_dim + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_norm(ks[2], d_in, "rmsnorm", dtype),
+        "out_proj": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _split_proj(proj: Array, cfg: ArchConfig):
+    s, d_in, nh, _ = _dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * s.state_dim]
+    dt = proj[..., 2 * d_in + 2 * s.state_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width k. xbc: (B, S, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                D: Array, chunk: int) -> Array:
+    """Chunked SSD. x: (b, S, nh, hd); dt: (b, S, nh); A, D: (nh,);
+    B, C: (b, S, N). Returns y (b, S, nh, hd)."""
+    b, S, nh, hd = x.shape
+    N = B.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nc = S // c
+    xr = x.reshape(b, nc, c, nh, hd)
+    dtr = dt.reshape(b, nc, c, nh)
+    Br = B.reshape(b, nc, c, N)
+    Cr = C.reshape(b, nc, c, N)
+
+    def step(H, inp):
+        xc, dtc, Bc, Cc = inp          # (b,c,nh,hd), (b,c,nh), (b,c,N), (b,c,N)
+        a = dtc * A                     # (b,c,nh), negative
+        cum = jnp.cumsum(a, axis=1)     # inclusive
+        # intra-chunk: decay(t,s) = exp(cum[t]-cum[s]), s<=t
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (b,t,s,nh)
+        tril = jnp.tril(jnp.ones((c, c), bool))
+        dec = jnp.where(tril[None, :, :, None], dec, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+        xdt = xc.astype(jnp.float32) * dtc[..., None]            # (b,c,nh,hd)
+        y_intra = jnp.einsum("bts,btsh,bshd->bthd", cb, dec, xdt)
+        # inter-chunk: y_inter[t] = exp(cum[t]) * C_t . H
+        y_inter = jnp.einsum("btn,bhnd->bthd",
+                             Cc.astype(jnp.float32), H) \
+            * jnp.exp(cum)[..., None]
+        y = y_intra + y_inter + D[None, None, :, None] * xc.astype(jnp.float32)
+        # new chunk state: S_l = sum_s exp(cum[last]-cum[s]) B_s (dt_s x_s)
+        dec_last = jnp.exp(cum[:, -1, None, :] - cum)            # (b,s,nh)
+        S_l = jnp.einsum("bsn,bsh,bshd->bhnd", Bc.astype(jnp.float32),
+                         dec_last, xdt)
+        H_new = jnp.exp(cum[:, -1])[:, :, None, None] * H + S_l
+        return H_new, y.astype(x.dtype)
+
+    H0 = jnp.zeros((b, nh, N, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, H0,
+                         (xr.swapaxes(0, 1), dtr.swapaxes(0, 1),
+                          Br.swapaxes(0, 1), Cr.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).reshape(b, S, nh, hd)
+
+
+def apply_ssm(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    mode: str = "train",
+    cache: Optional[SSMCache] = None,
+) -> tuple[Array, Optional[SSMCache]]:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    b, S, d = x.shape
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None
+        window = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, w, C)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+        )[:, None]
+        new_conv = window[:, 1:]
+        xs = conv_out[..., :d_in].reshape(b, nh, s.head_dim)
+        Bv = conv_out[..., d_in: d_in + s.state_dim]          # (B,1,N)->(B,N)
+        Bv = Bv.reshape(b, s.state_dim)
+        Cv = conv_out[..., d_in + s.state_dim:].reshape(b, s.state_dim)
+        dt1 = dt[:, 0]                                        # (B, nh)
+        alpha = jnp.exp(dt1 * A)                              # (B, nh)
+        xdt = xs.astype(jnp.float32) * dt1[..., None]         # (B, nh, hd)
+        state = cache.state * alpha[..., None, None] \
+            + jnp.einsum("bhd,bn->bhdn", xdt, Bv.astype(jnp.float32))
+        y = jnp.einsum("bhdn,bn->bhd", state, Cv.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, 1, d_in).astype(x.dtype)
+        new_cache = SSMCache(conv=new_conv, state=state)
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs = conv_out[..., :d_in].reshape(b, S, nh, s.head_dim)
+        Bv = conv_out[..., d_in: d_in + s.state_dim]
+        Cv = conv_out[..., d_in + s.state_dim:]
+        y4 = ssd_chunked(xs, dt, A, Bv, Cv, p["D"], s.chunk_size)
+        y = y4.reshape(b, S, d_in)
+        if mode == "prefill" and cache is not None:
+            # final state for subsequent decode: rerun last chunk state only
+            new_cache = SSMCache(
+                conv=jnp.concatenate([cache.conv, conv_out], axis=1)[:, -(s.conv_width - 1):],
+                state=_final_state(xs, dt, A, Bv),
+            )
+
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ p["out_proj"], new_cache
+
+
+def _final_state(xs: Array, dt: Array, A: Array, B: Array) -> Array:
+    """Exact final SSM state after a prefix: scan over chunks, states only."""
+    b, S, nh, hd = xs.shape
+    N = B.shape[-1]
+    c = 256
+    while S % c:
+        c //= 2
+    nc = S // c
+    xr = xs.reshape(b, nc, c, nh, hd)
+    dtr = dt.reshape(b, nc, c, nh)
+    Br = B.reshape(b, nc, c, N)
+
+    def step(H, inp):
+        xc, dtc, Bc = inp
+        a = dtc * A
+        cum = jnp.cumsum(a, axis=1)
+        dec_last = jnp.exp(cum[:, -1, None, :] - cum)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]
+        S_l = jnp.einsum("bsn,bsh,bshd->bhnd", Bc.astype(jnp.float32),
+                         dec_last, xdt)
+        return jnp.exp(cum[:, -1])[:, :, None, None] * H + S_l, None
+
+    H0 = jnp.zeros((b, nh, N, hd), jnp.float32)
+    H, _ = jax.lax.scan(step, H0, (xr.swapaxes(0, 1), dtr.swapaxes(0, 1),
+                                   Br.swapaxes(0, 1)))
+    # convert (b, nh, N, hd) -> cache layout (b, nh, hd, N)
+    return H.swapaxes(-1, -2)

@@ -1,0 +1,688 @@
+"""Composable split-transformer model zoo.
+
+Parameters are organized as ``{"bottom": ..., "top": ...}`` **from
+construction** — the SFL split (DESIGN.md §1) is a first-class property of
+the parameter tree, so client/server separation, bottom-model FedAvg and
+teacher broadcast are plain pytree operations.
+
+  bottom = embeddings/frontend + first ``cfg.split_layer`` blocks  (client)
+  top    = remaining blocks + final norm + heads (+ projection head lives in
+           repro.core.split)                                       (server)
+
+Repeated blocks stack parameters on a leading layer axis and run under
+``jax.lax.scan`` (HLO size O(1) in depth).  Heterogeneous stacks (zamba2's
+shared attention, deepseek's dense first layer, xLSTM's sLSTM/mLSTM groups)
+are expressed as scan + ``lax.cond`` / group-nested scans / unscanned prefix
+layers respectively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import xlstm as xl
+from repro.models.attention import (KVCache, apply_attention, init_attention,
+                                    init_kv_cache)
+from repro.models.common import (Params, apply_mlp, apply_norm, dense_init,
+                                 embed_init, init_mlp, init_norm)
+from repro.models.mla import MLACache, apply_mla, init_mla, init_mla_cache
+from repro.models.moe import DistContext, apply_moe, init_moe
+from repro.models.rope import default_mrope_positions, default_positions
+from repro.models.ssm import SSMCache, apply_ssm, init_ssm, init_ssm_cache
+
+Array = jax.Array
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _lm_logits(params: Params, x: Array):
+    """LM head application; skipped under the §Perf `chunked_ce` variant
+    (the train step then consumes `hidden` + the head weights directly via
+    repro.core.losses.streaming_vocab_stats)."""
+    from repro.models import variants
+    if variants.chunked_ce():
+        return None
+    return x @ params["lm_head"]
+
+
+# ===========================================================================
+# Attention-family layer (dense / moe / vlm / enc-dec building block)
+# ===========================================================================
+
+def _init_attn_layer(key: Array, cfg: ArchConfig, idx: int, *,
+                     cross: bool = False) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Params = {"attn_norm": init_norm(ks[0], cfg.d_model, cfg.norm, dt)}
+    p["attn"] = init_mla(ks[1], cfg, dt) if cfg.use_mla \
+        else init_attention(ks[1], cfg, dt)
+    if cross:
+        p["cross_norm"] = init_norm(ks[2], cfg.d_model, cfg.norm, dt)
+        p["cross"] = init_attention(ks[3], cfg, dt)
+    p["mlp_norm"] = init_norm(ks[4], cfg.d_model, cfg.norm, dt)
+    if cfg.moe is not None and cfg.moe.is_moe_layer(idx):
+        p["moe"] = init_moe(ks[5], cfg, dt)
+    else:
+        p["mlp"] = init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.mlp_gated, dt)
+    return p
+
+
+def _apply_attn_layer(p: Params, cfg: ArchConfig, x: Array, *, positions,
+                      mode: str, cache, dist: DistContext, causal: bool,
+                      cross_kv=None, cross_cache=None):
+    window_override = None
+    if dist.long_context and cfg.long_context_window:
+        window_override = cfg.long_context_window
+    h = apply_norm(p["attn_norm"], x, cfg.norm)
+    if cfg.use_mla:
+        attn_out, new_cache = apply_mla(p["attn"], cfg, h, positions=positions,
+                                        mode=mode, cache=cache)
+    else:
+        attn_out, new_cache = apply_attention(
+            p["attn"], cfg, h, positions=positions, mode=mode, cache=cache,
+            causal=causal, window_override=window_override)
+    x = x + attn_out
+    if cross_kv is not None:
+        h = apply_norm(p["cross_norm"], x, cfg.norm)
+        c_out, _ = apply_attention(p["cross"], cfg, h, positions=positions,
+                                   mode=mode, cache=None, causal=False,
+                                   kv_override=cross_kv)
+        x = x + c_out
+    h = apply_norm(p["mlp_norm"], x, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        out, aux = apply_moe(p["moe"], cfg, h, dist)
+    else:
+        out = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated)
+    return x + out, new_cache, aux
+
+
+def _init_attn_stack(key: Array, cfg: ArchConfig, n: int, first_idx: int, *,
+                     cross: bool = False) -> Params:
+    """Stacked params for n homogeneous layers starting at first_idx."""
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(lambda k: _init_attn_layer(k, cfg, first_idx, cross=cross))(keys[:n]) \
+        if n else None
+
+
+def _run_attn_stack(stack: Optional[Params], cfg: ArchConfig, x: Array, *,
+                    positions, mode: str, caches, dist: DistContext,
+                    causal: bool = True, cross_kv=None):
+    """Scan x through a stacked homogeneous segment."""
+    if stack is None:
+        return x, caches, jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        xc, aux = carry
+        p_i, cache_i = xs
+        xc, new_cache, aux_i = _apply_attn_layer(
+            p_i, cfg, xc, positions=positions, mode=mode, cache=cache_i,
+            dist=dist, causal=causal, cross_kv=cross_kv)
+        return (xc, aux + aux_i), new_cache
+
+    if dist.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (stack, caches))
+    return x, new_caches, aux
+
+
+def _stack_len(stack: Optional[Params]) -> int:
+    if stack is None:
+        return 0
+    return jax.tree.leaves(stack)[0].shape[0]
+
+
+def _init_stacked_kv_cache(n: int, batch: int, max_len: int,
+                           cfg: ArchConfig, dtype):
+    if n == 0:
+        return None
+    if cfg.use_mla:
+        one = lambda: init_mla_cache(batch, max_len, cfg, dtype)
+    else:
+        hd = cfg.head_dim or cfg.d_model // cfg.num_heads
+        window = cfg.sliding_window or 0
+        one = lambda: init_kv_cache(batch, max_len, cfg.num_kv_heads, hd,
+                                    window, dtype)
+    return jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(),
+                        one())
+
+
+# ===========================================================================
+# Model classes
+# ===========================================================================
+
+class DecoderLM:
+    """Decoder-only LM: dense / MoE / VLM families."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        # deepseek-style dense first layer(s) are unscannable prefix layers
+        self.prefix_n = 0
+        if cfg.moe is not None and cfg.moe.first_moe_layer > 0:
+            self.prefix_n = cfg.moe.first_moe_layer
+        self.split = max(cfg.split_layer, self.prefix_n)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng: Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(rng, 6)
+        n_b = self.split - self.prefix_n
+        n_t = cfg.num_layers - self.split
+        bottom: Params = {"embed": embed_init(ks[0], cfg.vocab_size,
+                                              cfg.d_model, dt)}
+        if self.prefix_n:
+            pk = jax.random.split(ks[1], self.prefix_n)
+            bottom["prefix"] = jax.vmap(
+                lambda k: _init_attn_layer(k, cfg, 0))(pk)
+        bottom["stack"] = _init_attn_stack(ks[2], cfg, n_b, self.prefix_n)
+        top: Params = {
+            "stack": _init_attn_stack(ks[3], cfg, n_t, self.split),
+            "final_norm": init_norm(ks[4], cfg.d_model, cfg.norm, dt),
+            "lm_head": dense_init(ks[5], cfg.d_model, cfg.vocab_size, dt),
+        }
+        return {"bottom": bottom, "top": top}
+
+    # -- caches ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int,
+                   long_context: bool = False) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        n_b = self.split - self.prefix_n
+        n_t = cfg.num_layers - self.split
+        return {
+            "bottom": {
+                "prefix": _init_stacked_kv_cache(self.prefix_n, batch,
+                                                 max_len, cfg, dt),
+                "stack": _init_stacked_kv_cache(n_b, batch, max_len, cfg, dt),
+            },
+            "top": {"stack": _init_stacked_kv_cache(n_t, batch, max_len,
+                                                    cfg, dt)},
+        }
+
+    # -- positions -------------------------------------------------------------
+    def _positions(self, batch_inputs: dict, b: int, s: int):
+        cfg = self.cfg
+        if cfg.rope_kind == "mrope":
+            if "mrope_positions" in batch_inputs:
+                return batch_inputs["mrope_positions"]
+            off = batch_inputs.get("pos", 0)
+            return default_mrope_positions(b, s, off)
+        if "positions" in batch_inputs:
+            return batch_inputs["positions"]
+        off = batch_inputs.get("pos", 0)
+        return jnp.broadcast_to(default_positions(b, s, off), (b, s))
+
+    # -- apply -------------------------------------------------------------
+    def bottom_apply(self, params: Params, batch_inputs: dict, *,
+                     mode: str = "train", cache=None,
+                     dist: DistContext = DistContext()):
+        cfg = self.cfg
+        tokens = batch_inputs["tokens"]
+        b, s_text = tokens.shape
+        x = params["embed"][tokens]
+        if cfg.modality == "vision" and "patch_embeds" in batch_inputs:
+            x = jnp.concatenate(
+                [batch_inputs["patch_embeds"].astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = self._positions(batch_inputs, b, s)
+        cache = cache or {"prefix": None, "stack": None}
+        aux = jnp.zeros((), jnp.float32)
+        new_prefix_cache = cache.get("prefix")
+        if self.prefix_n:
+            x, new_prefix_cache, aux0 = _run_attn_stack(
+                params["prefix"], cfg, x, positions=positions, mode=mode,
+                caches=cache.get("prefix"), dist=dist)
+            aux += aux0
+        x, new_stack_cache, aux1 = _run_attn_stack(
+            params["stack"], cfg, x, positions=positions, mode=mode,
+            caches=cache.get("stack"), dist=dist)
+        aux += aux1
+        new_cache = {"prefix": new_prefix_cache, "stack": new_stack_cache}
+        return x, new_cache, {"aux_loss": aux, "positions": positions}
+
+    def top_apply(self, params: Params, features: Array, *, extras: dict,
+                  mode: str = "train", cache=None,
+                  dist: DistContext = DistContext()):
+        cfg = self.cfg
+        cache = cache or {"stack": None}
+        x, new_stack_cache, aux = _run_attn_stack(
+            params["stack"], cfg, features, positions=extras["positions"],
+            mode=mode, caches=cache.get("stack"), dist=dist)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        out = {"logits": _lm_logits(params, x), "hidden": x,
+               "aux_loss": aux + extras.get("aux_loss", 0.0)}
+        return out, {"stack": new_stack_cache}
+
+
+class HybridMamba(DecoderLM):
+    """zamba2: scanned Mamba2 layers + weight-shared attention block applied
+    every ``shared_attn_period`` layers (lax.cond inside the scan)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.prefix_n = 0
+        # snap split to a period boundary so each side applies the shared
+        # block a whole number of times
+        per = cfg.shared_attn_period or cfg.num_layers
+        self.split = max(per, (cfg.split_layer // per) * per)
+        self.split = min(self.split, max(per, cfg.num_layers - per))
+
+    def _init_mamba_stack(self, key: Array, n: int):
+        keys = jax.random.split(key, max(n, 1))
+        return jax.vmap(lambda k: {
+            "norm": init_norm(k, self.cfg.d_model, self.cfg.norm, _dtype(self.cfg)),
+            "ssm": init_ssm(k, self.cfg, _dtype(self.cfg)),
+        })(keys[:n]) if n else None
+
+    def init(self, rng: Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(rng, 8)
+        n_b, n_t = self.split, cfg.num_layers - self.split
+        # the shared block is *untied across the split* (DESIGN.md §4): each
+        # side owns its replica so client/server parameter sets are disjoint.
+        bottom = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "stack": self._init_mamba_stack(ks[1], n_b),
+            "shared_attn": _init_attn_layer(ks[2], cfg, 0),
+        }
+        top = {
+            "stack": self._init_mamba_stack(ks[3], n_t),
+            "shared_attn": _init_attn_layer(ks[4], cfg, 0),
+            "final_norm": init_norm(ks[5], cfg.d_model, cfg.norm, dt),
+            "lm_head": dense_init(ks[6], cfg.d_model, cfg.vocab_size, dt),
+        }
+        return {"bottom": bottom, "top": top}
+
+    def _seg_cache(self, n: int, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        per = cfg.shared_attn_period or cfg.num_layers
+        n_apps = n // per
+        window = cfg.sliding_window
+        one_ssm = init_ssm_cache(batch, cfg, dt)
+        return {
+            "ssm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(), one_ssm),
+            "shared_kv": _init_stacked_kv_cache(
+                max(n_apps, 1), batch, max_len, cfg, dt),
+            "n_apps": n_apps,
+        }
+
+    def init_cache(self, batch: int, max_len: int,
+                   long_context: bool = False) -> Params:
+        cfg = self.cfg
+        if long_context and cfg.long_context_window:
+            # shared-attention ring buffers in long-context mode (DESIGN §5)
+            max_len_attn = cfg.long_context_window
+        else:
+            max_len_attn = max_len
+        b = self._seg_cache(self.split, batch, max_len_attn)
+        t = self._seg_cache(cfg.num_layers - self.split, batch, max_len_attn)
+        return {"bottom": {k: v for k, v in b.items() if k != "n_apps"},
+                "top": {k: v for k, v in t.items() if k != "n_apps"}}
+
+    def _run_segment(self, params: Params, x: Array, *, positions, mode,
+                     cache, dist: DistContext, n: int, layer0: int):
+        cfg = self.cfg
+        per = cfg.shared_attn_period or cfg.num_layers
+        cache = cache or {"ssm": None, "shared_kv": None}
+        ssm_cache = cache.get("ssm")
+        if ssm_cache is None:
+            ssm_cache = jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(),
+                init_ssm_cache(x.shape[0], cfg, _dtype(cfg)))
+        shared_kv = cache.get("shared_kv")
+        window_override = None
+        if dist.long_context and cfg.long_context_window:
+            window_override = cfg.long_context_window
+
+        def body(carry, xs):
+            xc, skv = carry
+            p_i, c_i, idx = xs
+            h = apply_norm(p_i["norm"], xc, cfg.norm)
+            out, new_ssm = apply_ssm(p_i["ssm"], cfg, h, mode=mode, cache=c_i)
+            xc = xc + out
+
+            apply_shared = ((layer0 + idx + 1) % per == 0)
+            app_idx = (layer0 + idx + 1) // per - 1 - layer0 // per
+
+            def do_shared(args):
+                xc, skv = args
+                kv_i = jax.tree.map(
+                    lambda t: jax.lax.dynamic_index_in_dim(
+                        t, app_idx, 0, keepdims=False), skv)
+                h = apply_norm(params["shared_attn"]["attn_norm"], xc, cfg.norm)
+                a_out, new_kv = apply_attention(
+                    params["shared_attn"]["attn"], cfg, h,
+                    positions=positions, mode=mode, cache=kv_i,
+                    window_override=window_override)
+                y = xc + a_out
+                h2 = apply_norm(params["shared_attn"]["mlp_norm"], y, cfg.norm)
+                y = y + apply_mlp(params["shared_attn"]["mlp"], h2, cfg.act,
+                                  cfg.mlp_gated)
+                skv = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new, app_idx, 0), skv, new_kv)
+                return y, skv
+
+            xc, skv = jax.lax.cond(apply_shared, do_shared, lambda a: a,
+                                   (xc, skv))
+            return (xc, skv), new_ssm
+
+        if dist.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        idxs = jnp.arange(n)
+        (x, shared_kv), new_ssm = jax.lax.scan(
+            body, (x, shared_kv), (params["stack"], ssm_cache, idxs))
+        return x, {"ssm": new_ssm, "shared_kv": shared_kv}
+
+    def bottom_apply(self, params, batch_inputs, *, mode="train", cache=None,
+                     dist=DistContext()):
+        tokens = batch_inputs["tokens"]
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        positions = self._positions(batch_inputs, b, s)
+        x, new_cache = self._run_segment(
+            params, x, positions=positions, mode=mode, cache=cache,
+            dist=dist, n=self.split, layer0=0)
+        return x, new_cache, {"aux_loss": jnp.zeros((), jnp.float32),
+                              "positions": positions}
+
+    def top_apply(self, params, features, *, extras, mode="train",
+                  cache=None, dist=DistContext()):
+        cfg = self.cfg
+        x, new_cache = self._run_segment(
+            params, features, positions=extras["positions"], mode=mode,
+            cache=cache, dist=dist, n=cfg.num_layers - self.split,
+            layer0=self.split)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return ({"logits": _lm_logits(params, x), "hidden": x,
+                 "aux_loss": extras.get("aux_loss", 0.0)}, new_cache)
+
+
+class XLSTMModel(DecoderLM):
+    """xlstm-1.3b: groups of (period-1) mLSTM blocks + 1 sLSTM block."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.prefix_n = 0
+        x = cfg.xlstm
+        per = x.slstm_period
+        self.n_groups = cfg.num_layers // per
+        # split snapped to group boundary
+        g = max(1, round(cfg.split_layer / per))
+        g = min(g, self.n_groups - 1)
+        self.split_groups = g
+        self.split = g * per
+
+    def _init_groups(self, key: Array, n_groups: int):
+        cfg = self.cfg
+        per = cfg.xlstm.slstm_period
+        if n_groups == 0:
+            return None
+        gk = jax.random.split(key, n_groups)
+
+        def one_group(k):
+            mk = jax.random.split(k, per)
+            return {
+                "mlstm": jax.vmap(lambda kk: xl.init_mlstm(
+                    kk, cfg, _dtype(cfg)))(mk[: per - 1]),
+                "slstm": xl.init_slstm(mk[-1], cfg, _dtype(cfg)),
+            }
+
+        return jax.vmap(one_group)(gk)
+
+    def init(self, rng: Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(rng, 5)
+        bottom = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+                  "groups": self._init_groups(ks[1], self.split_groups)}
+        top = {"groups": self._init_groups(ks[2],
+                                           self.n_groups - self.split_groups),
+               "final_norm": init_norm(ks[3], cfg.d_model, cfg.norm, dt),
+               "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_size, dt)}
+        return {"bottom": bottom, "top": top}
+
+    def _group_cache(self, n_groups: int, batch: int):
+        cfg = self.cfg
+        per = cfg.xlstm.slstm_period
+        if n_groups == 0:
+            return None
+        mc = xl.init_mlstm_cache(batch, cfg)
+        sc = xl.init_slstm_cache(batch, cfg)
+        bcast = lambda t, n: jnp.broadcast_to(t, (n,) + t.shape).copy()
+        return {
+            "mlstm": jax.tree.map(
+                lambda t: bcast(bcast(t, per - 1), n_groups), mc),
+            "slstm": jax.tree.map(lambda t: bcast(t, n_groups), sc),
+        }
+
+    def init_cache(self, batch: int, max_len: int,
+                   long_context: bool = False) -> Params:
+        return {
+            "bottom": self._group_cache(self.split_groups, batch),
+            "top": self._group_cache(self.n_groups - self.split_groups, batch),
+        }
+
+    def _run_groups(self, groups, x, *, mode, cache, batch,
+                    dist: DistContext = DistContext()):
+        cfg = self.cfg
+        if groups is None:
+            return x, None
+        n_groups = _stack_len(groups)
+        if cache is None:
+            cache = self._group_cache(n_groups, batch)
+
+        def group_body(xc, xs):
+            g_p, g_c = xs
+
+            def m_body(xc2, ys):
+                m_p, m_c = ys
+                xc2, new_mc = xl.apply_mlstm_block(m_p, cfg, xc2, mode=mode,
+                                                   cache=m_c)
+                return xc2, new_mc
+
+            xc, new_mc = jax.lax.scan(m_body, xc, (g_p["mlstm"], g_c["mlstm"]))
+            xc, new_sc = xl.apply_slstm_block(g_p["slstm"], cfg, xc,
+                                              mode=mode, cache=g_c["slstm"])
+            return xc, {"mlstm": new_mc, "slstm": new_sc}
+
+        if dist.remat and mode == "train":
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        x, new_cache = jax.lax.scan(group_body, x, (groups, cache))
+        return x, new_cache
+
+    def bottom_apply(self, params, batch_inputs, *, mode="train", cache=None,
+                     dist=DistContext()):
+        tokens = batch_inputs["tokens"]
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        x, new_cache = self._run_groups(params["groups"], x, mode=mode,
+                                        cache=cache, batch=b, dist=dist)
+        positions = self._positions(batch_inputs, b, s)
+        return x, new_cache, {"aux_loss": jnp.zeros((), jnp.float32),
+                              "positions": positions}
+
+    def top_apply(self, params, features, *, extras, mode="train",
+                  cache=None, dist=DistContext()):
+        cfg = self.cfg
+        x, new_cache = self._run_groups(params["groups"], features, mode=mode,
+                                        cache=cache, batch=features.shape[0],
+                                        dist=dist)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return ({"logits": _lm_logits(params, x), "hidden": x,
+                 "aux_loss": extras.get("aux_loss", 0.0)}, new_cache)
+
+
+class EncDecModel(DecoderLM):
+    """seamless-m4t: encoder-decoder; SFL split inside the encoder.
+
+    ``bottom`` = first ``split`` encoder layers (consuming frame embeddings
+    from the stubbed audio frontend); ``top`` = remaining encoder layers +
+    full decoder + head.  Decode steps run entirely in the top (the client
+    is idle after prefill — DESIGN.md §5)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.prefix_n = 0
+        self.split = min(max(1, cfg.num_encoder_layers // 2),
+                         cfg.num_encoder_layers - 1)
+
+    def init(self, rng: Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(rng, 8)
+        n_b = self.split
+        n_t = cfg.num_encoder_layers - self.split
+        bottom = {
+            "frame_proj": dense_init(ks[0], cfg.d_model, cfg.d_model, dt),
+            "stack": _init_attn_stack(ks[1], cfg, n_b, 0),
+        }
+        top = {
+            "stack": _init_attn_stack(ks[2], cfg, n_t, self.split),
+            "enc_norm": init_norm(ks[3], cfg.d_model, cfg.norm, dt),
+            "dec_embed": embed_init(ks[4], cfg.vocab_size, cfg.d_model, dt),
+            "dec_stack": _init_attn_stack(ks[5], cfg, cfg.num_layers, 0,
+                                          cross=True),
+            "final_norm": init_norm(ks[6], cfg.d_model, cfg.norm, dt),
+            "lm_head": dense_init(ks[7], cfg.d_model, cfg.vocab_size, dt),
+        }
+        return {"bottom": bottom, "top": top}
+
+    def init_cache(self, batch: int, max_len: int,
+                   long_context: bool = False) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        hd = cfg.head_dim or cfg.d_model // cfg.num_heads
+        dec_len = min(max_len, 4096)  # generated target length budget
+        return {
+            "bottom": None,
+            "top": {
+                "dec_self": _init_stacked_kv_cache(cfg.num_layers, batch,
+                                                   dec_len, cfg, dt),
+                # cross-attention K/V per decoder layer, computed at prefill
+                "cross_k": jnp.zeros((cfg.num_layers, batch, max_len,
+                                      cfg.num_kv_heads, hd), dt),
+                "cross_v": jnp.zeros((cfg.num_layers, batch, max_len,
+                                      cfg.num_kv_heads, hd), dt),
+            },
+        }
+
+    def bottom_apply(self, params, batch_inputs, *, mode="train", cache=None,
+                     dist=DistContext()):
+        cfg = self.cfg
+        if mode == "decode":
+            # client idle during decode; features pass through untouched
+            feats = batch_inputs.get("frames")
+            pos = self._positions(batch_inputs, *batch_inputs["tokens"].shape) \
+                if "tokens" in batch_inputs else batch_inputs["pos"]
+            return feats, cache, {"aux_loss": jnp.zeros((), jnp.float32),
+                                  "positions": pos}
+        frames = batch_inputs["frames"]           # (B, S, d) frontend stub
+        b, s, _ = frames.shape
+        x = frames.astype(_dtype(cfg)) @ params["frame_proj"]
+        positions = jnp.broadcast_to(default_positions(b, s), (b, s))
+        x, _, aux = _run_attn_stack(params["stack"], cfg, x,
+                                    positions=positions, mode="train",
+                                    caches=None, dist=dist, causal=False)
+        return x, None, {"aux_loss": aux, "positions": positions}
+
+    def _run_decoder(self, params, y, enc_out, *, positions, mode, cache,
+                     dist):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            yc, aux = carry
+            p_i, self_c, ck, cv = xs
+            yc, new_self, aux_i = _apply_attn_layer(
+                p_i, cfg, yc, positions=positions, mode=mode, cache=self_c,
+                dist=dist, causal=True, cross_kv=(ck, cv))
+            return (yc, aux + aux_i), new_self
+
+        dec_cache = cache["dec_self"] if cache else None
+        if dec_cache is None:
+            dec_cache = _init_stacked_kv_cache(
+                cfg.num_layers, y.shape[0], max(y.shape[1], 1), cfg,
+                _dtype(cfg))
+        (y, aux), new_self = jax.lax.scan(
+            body, (y, jnp.zeros((), jnp.float32)),
+            (params["dec_stack"], dec_cache, cache["cross_k"],
+             cache["cross_v"]))
+        return y, new_self, aux
+
+    def top_apply(self, params, features, *, extras, mode="train",
+                  cache=None, dist=DistContext()):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        hd = cfg.head_dim or cfg.d_model // cfg.num_heads
+        if mode != "decode":
+            enc, _, aux = _run_attn_stack(
+                params["stack"], cfg, features, positions=extras["positions"],
+                mode="train", caches=None, dist=dist, causal=False)
+            enc = apply_norm(params["enc_norm"], enc, cfg.norm)
+            # precompute cross K/V for every decoder layer
+            def cross_kv(p_i):
+                k = (enc @ p_i["cross"]["wk"]).reshape(
+                    enc.shape[0], enc.shape[1], cfg.num_kv_heads, hd)
+                v = (enc @ p_i["cross"]["wv"]).reshape(
+                    enc.shape[0], enc.shape[1], cfg.num_kv_heads, hd)
+                return k, v
+            ck, cv = jax.vmap(cross_kv)(params["dec_stack"])
+            tgt = extras["dec_tokens"]
+            y = params["dec_embed"][tgt]
+            dpos = jnp.broadcast_to(default_positions(*tgt.shape), tgt.shape)
+            if mode == "prefill" and cache is not None:
+                cache = dict(cache)
+                cache["cross_k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["cross_k"], ck, 0, axis=2)
+                cache["cross_v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["cross_v"], cv, 0, axis=2)
+            else:  # train: no persistent cache needed
+                cache = {"dec_self": None, "cross_k": ck, "cross_v": cv}
+            mode_dec = "prefill" if mode == "prefill" else "train"
+            y, new_self, aux2 = self._run_decoder(
+                params, y, enc, positions=dpos, mode=mode_dec, cache=cache,
+                dist=dist)
+        else:
+            tgt = extras["dec_tokens"]            # (B, 1)
+            y = params["dec_embed"][tgt]
+            dpos = extras["positions"]
+            assert cache is not None
+            y, new_self, aux2 = self._run_decoder(
+                params, y, None, positions=dpos, mode="decode", cache=cache,
+                dist=dist)
+            aux = jnp.zeros((), jnp.float32)
+        y = apply_norm(params["final_norm"], y, cfg.norm)
+        logits = _lm_logits(params, y)
+        new_cache = {"dec_self": new_self,
+                     "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        return ({"logits": logits, "hidden": y,
+                 "aux_loss": aux + aux2 + extras.get("aux_loss", 0.0)},
+                new_cache)
+
+
+# ===========================================================================
+# Builder
+# ===========================================================================
+
+def build_model(cfg: ArchConfig):
+    if cfg.arch_type == "cnn":
+        from repro.models.cnn import CNNModel
+        return CNNModel(cfg)
+    if cfg.is_encoder_decoder:
+        return EncDecModel(cfg)
+    if cfg.block_kind == "mamba2":
+        return HybridMamba(cfg)
+    if cfg.block_kind == "xlstm":
+        return XLSTMModel(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,48 @@
+"""Perf-variant switchboard (§Perf hillclimbing).
+
+A tiny global registry the perf harness toggles before re-lowering; model
+code consults it through accessor functions so the default path stays
+zero-overhead and the variants are greppable.  Not thread-safe by design —
+the harness is a single-process offline tool.
+"""
+from __future__ import annotations
+
+_VARIANTS: dict = {}
+
+
+def set_variants(v: dict) -> None:
+    global _VARIANTS
+    _VARIANTS = dict(v or {})
+
+
+def get(name: str, default=None):
+    return _VARIANTS.get(name, default)
+
+
+def slstm_unroll() -> int:
+    return int(get("slstm_unroll", 1))
+
+
+def kv_replicated() -> bool:
+    return bool(int(get("kv_replicated", 0)))
+
+
+def chunked_ce() -> bool:
+    return bool(int(get("chunked_ce", 0)))
+
+
+def remat_enabled() -> bool:
+    return bool(int(get("remat", 1)))
+
+
+def bf16_probs() -> bool:
+    """Attention softmax pipeline in bf16 after stable max-subtraction —
+    halves the f32 probability traffic the XLA-lowered chunked attention
+    materializes (the Pallas flash kernel removes it entirely on TPU)."""
+    return bool(int(get("bf16_probs", 0)))
+
+
+def slstm_bf16() -> bool:
+    """Store sLSTM recurrent weights R in bf16 — halves the dominant
+    R-re-read traffic of the sequential scan."""
+    return bool(int(get("slstm_bf16", 0)))

@@ -1,0 +1,293 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunk-parallel)
+and sLSTM (scalar memory, strictly sequential) with stabilized exponential
+gating.
+
+mLSTM train/prefill uses a chunkwise form with a carried stabilizer m — the
+same algebra as the official chunkwise kernels: within-chunk contributions
+are computed as a masked (c, c) matmul, cross-chunk state (C, n, m) is
+carried by ``lax.scan``.  Decode is the O(1) recurrent step (the oracle for
+the chunked form, see tests).  sLSTM is sequential by construction; its
+recurrence runs under ``lax.scan`` with block-diagonal (per-head) recurrent
+weights.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+from repro.models.common import (Params, apply_mlp, apply_norm, dense_init,
+                                 init_mlp, init_norm, ones, zeros)
+
+Array = jax.Array
+
+
+class MLSTMCache(NamedTuple):
+    C: Array   # (B, nh, dk, dv) matrix memory
+    n: Array   # (B, nh, dk) normalizer
+    m: Array   # (B, nh) stabilizer
+
+
+class SLSTMCache(NamedTuple):
+    h: Array   # (B, d)
+    c: Array   # (B, d)
+    n: Array   # (B, d)
+    m: Array   # (B, d)
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    x = cfg.xlstm or XLSTMConfig()
+    d_in = int(x.mlstm_proj_factor * cfg.d_model)
+    nh = max(1, d_in // x.mlstm_head_dim)
+    hd = d_in // nh
+    return x, d_in, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key: Array, cfg: ArchConfig, dtype) -> Params:
+    x, d_in, nh, hd = _mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d, d_in, dtype),
+        "up_gate": dense_init(ks[1], d, d_in, dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype),
+        "w_if": dense_init(ks[5], d_in, 2 * nh, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((nh,), jnp.float32),
+                                 jnp.full((nh,), 3.0, jnp.float32)]),
+        "norm": init_norm(ks[6], d_in, "rmsnorm", dtype),
+        "pre_norm": init_norm(ks[6], d, "layernorm", dtype),
+        "down": dense_init(ks[7], d_in, d, dtype),
+    }
+
+
+def init_mlstm_cache(batch: int, cfg: ArchConfig) -> MLSTMCache:
+    _, d_in, nh, hd = _mlstm_dims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, nh, hd), jnp.float32),
+        m=jnp.full((batch, nh), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_qkv_gates(p: Params, cfg: ArchConfig, x: Array):
+    _, d_in, nh, hd = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    up = x @ p["up"]
+    gate = jax.nn.silu(x @ p["up_gate"])
+    q = (up @ p["wq"]).reshape(b, s, nh, hd)
+    k = (up @ p["wk"]).reshape(b, s, nh, hd) / math.sqrt(hd)
+    v = (up @ p["wv"]).reshape(b, s, nh, hd)
+    if_pre = up.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    logi = if_pre[..., :nh]                              # (b, s, nh)
+    logf = jax.nn.log_sigmoid(if_pre[..., nh:])          # (b, s, nh) <= 0
+    return q, k, v, logi, logf, gate
+
+
+def mlstm_step(carry: MLSTMCache, q, k, v, logi, logf) -> tuple[MLSTMCache, Array]:
+    """One recurrent step. q,k,v: (B, nh, hd); logi/logf: (B, nh)."""
+    m_new = jnp.maximum(logf + carry.m, logi)
+    f = jnp.exp(logf + carry.m - m_new)[..., None]
+    i = jnp.exp(logi - m_new)[..., None]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f[..., None] * carry.C + i[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = f * carry.n + i * kf
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))[..., None]
+    return MLSTMCache(C, n, m_new), (num / den).astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, logi, logf, cache: Optional[MLSTMCache],
+                  chunk: int) -> tuple[Array, MLSTMCache]:
+    """Chunkwise-parallel mLSTM. q,k,v: (b, S, nh, hd)."""
+    b, S, nh, hd = q.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nc = S // c
+    rs = lambda t: t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    lic, lfc = rs(logi), rs(logf)
+    if cache is None:
+        cache = MLSTMCache(
+            C=jnp.zeros((b, nh, hd, hd), jnp.float32),
+            n=jnp.zeros((b, nh, hd), jnp.float32),
+            m=jnp.full((b, nh), -1e30, jnp.float32),
+        )
+
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(carry: MLSTMCache, inp):
+        qx, kx, vx, li, lf = inp
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qx, kx, vx))
+        F = jnp.cumsum(lf, axis=1)                  # (b, c, nh) inclusive
+        # D(t, s) = F[t] - F[s] + logi[s], s <= t
+        D = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        D = jnp.where(tril[None, :, :, None], D, -jnp.inf)
+        inter_log = F + carry.m[:, None, :]         # (b, c, nh)
+        m_new = jnp.maximum(jnp.max(D, axis=2), inter_log)
+        m_new = jnp.maximum(m_new, -1e30)
+        W = jnp.exp(D - m_new[:, :, None, :])       # (b, t, s, nh)
+        inter_w = jnp.exp(inter_log - m_new)        # (b, c, nh)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf)
+        num = jnp.einsum("btsh,btsh,bshv->bthv", scores, W, vf)
+        num += inter_w[..., None] * jnp.einsum("bthk,bhkv->bthv", qf, carry.C)
+        nvec = jnp.einsum("btsh,bshk->bthk", W, kf) \
+            + inter_w[..., None] * carry.n[:, None]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthk,bthk->bth", qf, nvec)),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None]).astype(qx.dtype)
+        # carry update
+        Ftot = F[:, -1]                              # (b, nh)
+        tail = Ftot[:, None, :] - F + li             # (b, c, nh)
+        m_out = jnp.maximum(Ftot + carry.m, jnp.max(tail, axis=1))
+        wC = jnp.exp(tail - m_out[:, None, :])
+        C_out = jnp.exp(Ftot + carry.m - m_out)[..., None, None] * carry.C \
+            + jnp.einsum("bsh,bshk,bshv->bhkv", wC, kf, vf)
+        n_out = jnp.exp(Ftot + carry.m - m_out)[..., None] * carry.n \
+            + jnp.einsum("bsh,bshk->bhk", wC, kf)
+        return MLSTMCache(C_out, n_out, m_out), h
+
+    final, hs = jax.lax.scan(step, cache, (qc, kc, vc, lic, lfc))
+    return hs.swapaxes(0, 1).reshape(b, S, nh, hd), final
+
+
+def apply_mlstm(p: Params, cfg: ArchConfig, x: Array, *, mode: str = "train",
+                cache: Optional[MLSTMCache] = None):
+    _, d_in, nh, hd = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    q, k, v, logi, logf, gate = _mlstm_qkv_gates(p, cfg, x)
+    if mode == "decode":
+        assert cache is not None
+        new_cache, h = mlstm_step(cache, q[:, 0], k[:, 0], v[:, 0],
+                                  logi[:, 0], logf[:, 0])
+        h = h[:, None]
+    else:
+        h, new_cache = mlstm_chunked(q, k, v, logi, logf,
+                                     cache if mode == "prefill" else None,
+                                     chunk=128)
+        if mode != "prefill":
+            new_cache = cache
+    h = h.reshape(b, s, d_in)
+    h = apply_norm(p["norm"], h, "rmsnorm") * gate
+    return h @ p["down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: Array, cfg: ArchConfig, dtype) -> Params:
+    x = cfg.xlstm or XLSTMConfig()
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    d_ff = int(x.slstm_ff_factor * d)
+    from repro.models import variants
+    r_dtype = jnp.bfloat16 if variants.slstm_bf16() else jnp.float32
+    return {
+        "w": dense_init(ks[0], d, 4 * d, jnp.float32),
+        "r": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32)
+              / math.sqrt(hd)).astype(r_dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),  # f bias
+                              jnp.zeros((d,), jnp.float32)]),
+        "norm": init_norm(ks[2], d, "layernorm", dtype),
+        "ffn": init_mlp(ks[3], d, d_ff, True, dtype),
+        "ffn_norm": init_norm(ks[3], d, "layernorm", dtype),
+    }
+
+
+def init_slstm_cache(batch: int, cfg: ArchConfig) -> SLSTMCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMCache(h=z, c=z, n=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def slstm_step(p: Params, cfg: ArchConfig, carry: SLSTMCache,
+               wx: Array) -> tuple[SLSTMCache, Array]:
+    """wx: precomputed W x_t + b, (B, 4d) ordered [z, i, f, o]."""
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    hprev = carry.h.reshape(-1, nh, hd)
+    rec = jnp.einsum("bhd,hdk->bhk", hprev.astype(p["r"].dtype), p["r"],
+                     preferred_element_type=jnp.float32).reshape(-1, 4 * d)
+    # r output per head ordered [z, i, f, o] within the head -> interleave
+    rec = rec.reshape(-1, nh, 4, hd).swapaxes(1, 2).reshape(-1, 4 * d)
+    pre = wx + rec
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(ft + carry.m, it)  # exp-input, exp-forget gating
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + carry.m - m_new)
+    c = f * carry.c + i * jnp.tanh(zt)
+    n = f * carry.n + i
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return SLSTMCache(h=h, c=c, n=n, m=m_new), h
+
+
+def apply_slstm(p: Params, cfg: ArchConfig, x: Array, *, mode: str = "train",
+                cache: Optional[SLSTMCache] = None):
+    b, s, d = x.shape
+    wx = x.astype(jnp.float32) @ p["w"] + p["b"]    # (B, S, 4d) [z,i,f,o]
+    if cache is None:
+        cache = init_slstm_cache(b, cfg)
+    if mode == "decode":
+        new_cache, h = slstm_step(p, cfg, cache, wx[:, 0])
+        hs = h[:, None]
+    else:
+        from repro.models import variants
+        u = variants.slstm_unroll()
+        if u > 1 and s % u == 0:
+            # §Perf variant: unroll the time scan by u so the recurrent
+            # weights R are read once per u steps instead of every step
+            wxu = wx.swapaxes(0, 1).reshape(s // u, u, b, 4 * cfg.d_model)
+
+            def step_u(carry, wxt):
+                hs_inner = []
+                for i in range(u):
+                    carry, h = slstm_step(p, cfg, carry, wxt[i])
+                    hs_inner.append(h)
+                return carry, jnp.stack(hs_inner)
+
+            new_cache, hs = jax.lax.scan(step_u, cache, wxu)
+            hs = hs.reshape(s, b, -1).swapaxes(0, 1)
+        else:
+            def step(carry, wxt):
+                return slstm_step(p, cfg, carry, wxt)
+            new_cache, hs = jax.lax.scan(step, cache, wx.swapaxes(0, 1))
+            hs = hs.swapaxes(0, 1)
+        if mode != "prefill":
+            new_cache = cache
+    return hs.astype(x.dtype), new_cache
+
+
+def apply_slstm_block(p: Params, cfg: ArchConfig, x: Array, *,
+                      mode: str = "train",
+                      cache: Optional[SLSTMCache] = None):
+    h, new_cache = apply_slstm(p, cfg, apply_norm(p["norm"], x, "layernorm"),
+                               mode=mode, cache=cache)
+    x = x + h
+    x = x + apply_mlp(p["ffn"], apply_norm(p["ffn_norm"], x, "layernorm"),
+                      "gelu", True)
+    return x, new_cache
+
+
+def apply_mlstm_block(p: Params, cfg: ArchConfig, x: Array, *,
+                      mode: str = "train",
+                      cache: Optional[MLSTMCache] = None):
+    h, new_cache = apply_mlstm(p, cfg, apply_norm(p["pre_norm"], x, "layernorm"),
+                               mode=mode, cache=cache)
+    return x + h, new_cache

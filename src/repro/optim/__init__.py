@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OptState, adamw, apply_updates, sgd,
+                                    tree_add, tree_scale)
+from repro.optim.schedule import constant_schedule, cosine_decay_schedule
+
+__all__ = ["OptState", "adamw", "apply_updates", "sgd", "tree_add",
+           "tree_scale", "constant_schedule", "cosine_decay_schedule"]

@@ -1,0 +1,86 @@
+"""Minimal functional optimizers (SGD+momentum — the paper's setting — and
+AdamW), optax-style but self-contained.
+
+An optimizer is a pair of functions:
+    init(params) -> opt_state
+    update(grads, opt_state, params, lr) -> (updates, new_opt_state)
+``apply_updates`` adds updates to params.  All state is a pytree, so
+optimizer state shards exactly like parameters under pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any]]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params | None = None
+
+
+def tree_scale(t: Params, s) -> Params:
+    return jax.tree.map(lambda x: x * s, t)
+
+
+def tree_add(a: Params, b: Params) -> Params:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state: OptState, params, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads,
+                                 params)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+        else:
+            upd = mu
+        updates = jax.tree.map(lambda u: -lr * u, upd)
+        return updates, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params),
+                        nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state: OptState, params, lr):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                   + weight_decay * p),
+            mu, nu, params)
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

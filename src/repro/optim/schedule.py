@@ -1,0 +1,24 @@
+"""Learning-rate schedules. The paper uses SGDR-style cosine decay
+(Loshchilov & Hutter) with eta=0.02."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay_schedule(lr: float, total_steps: int, warmup: int = 0,
+                          final_frac: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        if warmup:
+            warm = lr * jnp.minimum(step / warmup, 1.0)
+        else:
+            warm = jnp.asarray(lr, jnp.float32)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, lr * cos)
+
+    return fn

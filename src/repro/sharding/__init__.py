@@ -1,0 +1,5 @@
+from repro.sharding.specs import (batch_pspec, client_stack_pspecs,
+                                  leaf_pspec, tree_pspecs, tree_shardings)
+
+__all__ = ["batch_pspec", "client_stack_pspecs", "leaf_pspec", "tree_pspecs",
+           "tree_shardings"]

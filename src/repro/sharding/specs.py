@@ -1,0 +1,134 @@
+"""Parameter / activation partition rules (DESIGN.md §3).
+
+2D layout over ("data", "model") (+ optional leading "pod" data axis):
+
+  * attention: q/k/v projections column-parallel (heads on ``model``),
+    output row-parallel;
+  * MLP: up/gate column-parallel (d_ff on ``model``), down row-parallel;
+  * MoE: experts sharded on ``model`` (expert parallelism — matches the
+    all_to_all dispatch in repro.models.moe), router replicated;
+  * embeddings vocab-sharded, LM head vocab-sharded;
+  * MLA: the per-head up-projections (wq_b, w_uk, w_uv) column-parallel,
+    the small latent projections replicated;
+  * norms / biases / scalars replicated.
+
+Rules key off the *trailing* dimensions of each leaf; any extra leading
+axes (scanned layer stacks, xLSTM group nesting) are unsharded.  Client-
+stacked bottom parameters additionally shard their leading client axis
+over the data axes (``client_stack_pspecs``)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# rule: last-key-name -> (trailing_rank, trailing_spec)
+_RULES: dict[str, tuple[int, tuple]] = {
+    "embed": (2, ("model", None)),
+    "dec_embed": (2, ("model", None)),
+    "lm_head": (2, (None, "model")),
+    "wq": (2, (None, "model")),
+    "wk": (2, (None, "model")),
+    "wv": (2, (None, "model")),
+    "wo": (2, ("model", None)),
+    "bq": (1, ("model",)),
+    "bk": (1, ("model",)),
+    "bv": (1, ("model",)),
+    "up": (2, (None, "model")),
+    "gate": (2, (None, "model")),
+    "down": (2, ("model", None)),
+    "up_gate": (2, (None, "model")),
+    "router": (2, (None, None)),
+    # MLA
+    "wq_a": (2, (None, None)),
+    "wq_b": (2, (None, "model")),
+    "wkv_a": (2, (None, None)),
+    "w_uk": (2, (None, "model")),
+    "w_uv": (2, (None, "model")),
+    # SSM / xLSTM
+    "in_proj": (2, (None, "model")),
+    "out_proj": (2, ("model", None)),
+    "conv_w": (2, (None, "model")),
+    "conv_b": (1, ("model",)),
+    "w_if": (2, (None, None)),
+    "r": (3, (None, None, None)),
+    "frame_proj": (2, (None, None)),
+}
+
+# under an "experts" subtree, leaves gain a leading expert axis -> "model"
+_EXPERT_RULES: dict[str, tuple[int, tuple]] = {
+    "up": (3, ("model", None, None)),
+    "gate": (3, ("model", None, None)),
+    "down": (3, ("model", None, None)),
+}
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"[{p.idx}]")
+    return out
+
+
+def leaf_pspec(path, leaf, *, model_axis: str = "model") -> P:
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    rules = _EXPERT_RULES if "experts" in keys[:-1] else _RULES
+    rule = rules.get(name)
+    if rule is None and "experts" in keys[:-1]:
+        rule = _RULES.get(name)
+    if name in ("wk", "wv", "bk", "bv"):
+        from repro.models import variants
+        if variants.kv_replicated():
+            # §Perf variant: replicate K/V instead of padding few kv heads
+            # across many model ranks
+            rule = None
+    nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if rule is None:
+        return P(*([None] * nd))
+    rank, spec = rule
+    if nd < rank:
+        return P(*([None] * nd))
+    spec = tuple(model_axis if s == "model" else s for s in spec)
+    return P(*([None] * (nd - rank) + list(spec)))
+
+
+def tree_pspecs(tree: Any, *, model_axis: str = "model") -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: leaf_pspec(p, x, model_axis=model_axis), tree)
+
+
+def client_stack_pspecs(tree: Any, data_axes: tuple,
+                        *, model_axis: str = "model") -> Any:
+    """Specs for client-stacked bottoms: leading axis over the data axes."""
+    def one(path, leaf):
+        base = leaf_pspec(path, _Shrunk(leaf), model_axis=model_axis)
+        return P(data_axes, *tuple(base))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+class _Shrunk:
+    """View of a leaf with the leading (client) axis stripped."""
+
+    def __init__(self, leaf):
+        self.ndim = leaf.ndim - 1
+        self.shape = leaf.shape[1:]
+
+
+def tree_shardings(mesh: Mesh, tree_of_pspecs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(ndim: int, data_axes: tuple, *, batch_dim: int = 0,
+                shard_batch: bool = True) -> P:
+    spec = [None] * ndim
+    if shard_batch:
+        spec[batch_dim] = data_axes
+    return P(*spec)

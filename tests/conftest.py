@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the host's real (1) device; only dryrun.py forces
+# 512 placeholder devices (and only in its own process).
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SemiSFLConfig
+from repro.core.adaptation import FreqController
+from repro.core.ema import ema_update
+from repro.core.queue import enqueue, init_queue
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# EMA
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.0, 1.0), st.integers(1, 5))
+def test_ema_convex_combination(gamma, n):
+    t = {"w": jnp.ones((n,)) * 2.0}
+    s = {"w": jnp.ones((n,)) * 4.0}
+    out = ema_update(t, s, gamma)
+    want = gamma * 2.0 + (1 - gamma) * 4.0
+    assert np.allclose(out["w"], want, atol=1e-6)
+
+
+@given(st.floats(0.5, 0.999))
+def test_ema_fixed_point(gamma):
+    s = {"w": jnp.arange(4.0)}
+    assert np.allclose(ema_update(s, s, gamma)["w"], s["w"], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg aggregation
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(1, 8))
+def test_fedavg_identical_clients_is_identity(n_clients, dim):
+    from repro.core.engine import SemiSFLSystem
+    w = jnp.arange(float(dim))
+    stacked = {"w": jnp.broadcast_to(w, (n_clients, dim))}
+    agg = SemiSFLSystem.aggregate(stacked)
+    assert np.allclose(agg["w"], w)
+
+
+@given(st.integers(2, 6))
+def test_fedavg_linearity(n):
+    rngs = np.random.RandomState(0)
+    ws = rngs.randn(n, 5).astype(np.float32)
+    from repro.core.engine import SemiSFLSystem
+    agg = SemiSFLSystem.aggregate({"w": jnp.asarray(ws)})
+    assert np.allclose(agg["w"], ws.mean(0), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Memory queue
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 16), st.integers(1, 48))
+def test_queue_ring_semantics(batch, n_steps):
+    qlen, d = 32, 4
+    q = init_queue(qlen, d)
+    total = 0
+    for i in range(n_steps):
+        z = jnp.full((batch, d), float(i))
+        labels = jnp.full((batch,), i, jnp.int32)
+        q = enqueue(q, z, labels)
+        total += batch
+    # fill never exceeds capacity; pointer wraps
+    assert int(q.valid.sum()) == min(total, qlen)
+    assert int(q.ptr) == total % qlen
+    if total >= qlen:
+        # every slot holds one of the most recent ceil(qlen/batch) batches
+        oldest_kept = (total - qlen) // batch
+        assert int(q.label.min()) >= oldest_kept
+
+
+@given(st.integers(1, 10))
+def test_queue_confidence_flags(batch):
+    q = init_queue(16, 2)
+    conf = jnp.asarray(np.arange(batch) % 2 == 0)
+    q = enqueue(q, jnp.ones((batch, 2)), jnp.zeros(batch, jnp.int32), conf)
+    assert int((q.conf & q.valid).sum()) == int(conf.sum())
+
+
+# ---------------------------------------------------------------------------
+# K_s adaptation (Eq. 9-10)
+# ---------------------------------------------------------------------------
+
+def _mk_controller(k_u=10, obs=2, window=2, alpha=2.0, beta=4.0,
+                   labeled=100, total=1000):
+    cfg = SemiSFLConfig(k_s_init=64, k_u=k_u, observation_period=obs,
+                        adaptation_window=window, alpha=alpha, beta=beta)
+    return FreqController(cfg, labeled, total)
+
+
+def test_ks_decays_when_unsup_declines_faster():
+    c = _mk_controller()
+    # f_u drops fast, f_s flat -> indicators fire -> K_s decays
+    f_u = 10.0
+    for r in range(20):
+        c.update(5.0, f_u)
+        f_u *= 0.8
+    assert c.k_s < 64
+
+
+def test_ks_never_below_kmin_and_monotone():
+    c = _mk_controller()
+    ks_hist = []
+    f_u = 100.0
+    for r in range(200):
+        c.update(5.0, f_u)
+        f_u *= 0.9
+        ks_hist.append(c.k_s)
+    assert min(ks_hist) >= c.k_min
+    assert all(a >= b for a, b in zip(ks_hist, ks_hist[1:]))  # monotone down
+
+
+def test_ks_constant_when_sup_declines_faster():
+    c = _mk_controller()
+    f_s = 10.0
+    for r in range(40):
+        c.update(f_s, 5.0)
+        f_s *= 0.8
+    assert c.k_s == 64
+
+
+@given(st.floats(1.1, 4.0), st.floats(1.0, 16.0))
+def test_kmin_formula(alpha, beta):
+    cfg = SemiSFLConfig(alpha=alpha, beta=beta, k_u=10)
+    c = FreqController(cfg, 250, 5000)
+    assert c.k_min == max(1, int(beta * 250 / 5000 * 10))
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.0, 0.99))
+def test_sgd_momentum_first_step_is_plain_sgd(mom):
+    from repro.optim import apply_updates, sgd
+    opt = sgd(momentum=mom)
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.ones(3)}
+    st_ = opt.init(p)
+    upd, _ = opt.update(g, st_, p, 0.1)
+    assert np.allclose(upd["w"], -0.1)
+
+
+def test_adamw_decoupled_decay():
+    from repro.optim import adamw
+    opt = adamw(weight_decay=0.5)
+    p = {"w": jnp.ones(2) * 10.0}
+    g = {"w": jnp.zeros(2)}
+    st_ = opt.init(p)
+    upd, _ = opt.update(g, st_, p, 0.1)
+    assert np.allclose(upd["w"], -0.1 * 0.5 * 10.0)

@@ -1,0 +1,89 @@
+"""Data pipeline tests: synthetic datasets, Dirichlet partitioning,
+augmentations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (Loader, dirichlet_partition, make_image_dataset,
+                        make_lm_dataset, partition_stats, strong_augment,
+                        token_strong, train_test_split, uniform_partition,
+                        weak_augment)
+
+settings.register_profile("data", max_examples=15, deadline=None)
+settings.load_profile("data")
+
+
+def test_image_dataset_learnable_structure():
+    ds = make_image_dataset(0, num_classes=4, n=400, image_size=16)
+    assert ds.x.shape == (400, 16, 16, 3)
+    assert ds.x.min() >= 0.0 and ds.x.max() <= 1.0
+    # class-conditional structure: same-class pairs closer than cross-class
+    same, cross = [], []
+    for c in range(4):
+        idx = np.where(ds.y == c)[0][:10]
+        other = np.where(ds.y != c)[0][:10]
+        same.append(np.mean([np.abs(ds.x[i] - ds.x[j]).mean()
+                             for i in idx[:5] for j in idx[5:]]))
+        cross.append(np.mean([np.abs(ds.x[i] - ds.x[j]).mean()
+                              for i, j in zip(idx, other)]))
+    assert np.mean(same) < np.mean(cross)
+
+
+@given(st.integers(2, 20), st.floats(0.05, 5.0))
+def test_dirichlet_partition_covers_everything(n_clients, alpha):
+    labels = np.random.RandomState(0).randint(0, 10, 500)
+    parts = dirichlet_partition(0, labels, n_clients, alpha)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500       # exact partition
+    assert all(len(p) >= 2 for p in parts)     # min guarantee
+
+
+def test_dirichlet_skew_increases_as_alpha_drops():
+    labels = np.random.RandomState(0).randint(0, 10, 4000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(0, labels, 10, alpha)
+        stats = partition_stats(parts, labels).astype(float)
+        p = stats / np.maximum(stats.sum(1, keepdims=True), 1)
+        # mean max class share per client: 0.1 = uniform, 1.0 = one class
+        return p.max(1).mean()
+
+    assert skew(0.05) > skew(0.5) > skew(100.0)
+
+
+def test_augmentations_preserve_shape_and_range():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(8, 16, 16, 3), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    w = weak_augment(key, x)
+    s = strong_augment(key, x)
+    assert w.shape == x.shape and s.shape == x.shape
+    assert float(s.min()) >= 0.0 and float(s.max()) <= 1.0
+    # strong is a bigger perturbation than weak on average
+    assert float(jnp.abs(s - x).mean()) > float(jnp.abs(w - x).mean()) * 0.5
+
+
+def test_token_strong_corrupts_some_tokens():
+    toks = jnp.ones((4, 64), jnp.int32) * 7
+    out = token_strong(jax.random.PRNGKey(0), toks, vocab=100)
+    frac = float((out != toks).mean())
+    assert 0.02 < frac < 0.5
+
+
+def test_loader_cycles_without_repeat_within_epoch():
+    ds = make_image_dataset(0, num_classes=2, n=64, image_size=8)
+    ld = Loader(ds, np.arange(32), batch=8, seed=0)
+    seen = [tuple(np.sort(ld.next()[1])) for _ in range(4)]
+    assert sum(len(s) for s in seen) == 32
+
+
+def test_lm_dataset_classes_have_distinct_statistics():
+    ds = make_lm_dataset(0, vocab=32, n=64, seq_len=32, num_classes=2)
+    h0 = np.bincount(ds.x[ds.y == 0].ravel(), minlength=32)
+    h1 = np.bincount(ds.x[ds.y == 1].ravel(), minlength=32)
+    h0 = h0 / h0.sum()
+    h1 = h1 / h1.sum()
+    assert np.abs(h0 - h1).sum() > 0.2

@@ -1,0 +1,99 @@
+"""Tests for the trip-count-aware HLO cost analyzer (the roofline's
+measurement instrument — tested against programs with known costs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_scale_with_trip_count():
+    def f(ws):
+        def step(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(step, jnp.ones((128, 128)), ws)
+        return y
+
+    flops = {}
+    for n in (4, 16):
+        text = _compile(f, jnp.ones((n, 128, 128)))
+        flops[n] = analyze(text)["flops"]
+        assert flops[n] == pytest.approx(n * 2 * 128**3, rel=1e-6)
+    assert flops[16] == pytest.approx(4 * flops[4], rel=1e-6)
+
+
+def test_matmul_chain_flops_exact():
+    def g(x, w1, w2):
+        return (x @ w1) @ w2
+
+    text = _compile(g, jnp.ones((64, 256)), jnp.ones((256, 512)),
+                    jnp.ones((512, 128)))
+    want = 2 * 64 * 256 * 512 + 2 * 64 * 512 * 128
+    assert analyze(text)["flops"] == pytest.approx(want, rel=1e-6)
+
+
+def test_nested_scan_flops():
+    def f(ws):
+        def outer(c, wpair):
+            def inner(ci, w):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, wpair)
+            return c, None
+        y, _ = jax.lax.scan(outer, jnp.ones((64, 64)), ws)
+        return y
+
+    text = _compile(f, jnp.ones((3, 5, 64, 64)))
+    assert analyze(text)["flops"] == pytest.approx(15 * 2 * 64**3, rel=1e-6)
+
+
+def test_parse_handles_tuple_types_with_index_comments():
+    # a program whose while carry has >5 elements (triggers /*index=5*/)
+    def f(x):
+        def step(carry, _):
+            a, b, c, d, e, g = carry
+            return (a @ a, b + 1, c, d, e, g), None
+        init = (x, jnp.zeros(()), jnp.ones(3), jnp.ones(4), jnp.ones(5),
+                jnp.ones(6))
+        out, _ = jax.lax.scan(step, init, None, length=7)
+        return out[0]
+
+    text = _compile(f, jnp.ones((32, 32)))
+    comps = parse_hlo(text)
+    assert "__entry__" in comps
+    assert analyze(text)["flops"] == pytest.approx(7 * 2 * 32**3, rel=1e-6)
+
+
+def test_collective_bytes_counted():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from repro.launch.hlo_cost import analyze
+        mesh = jax.make_mesh((4,), ("d",), axis_types=(AxisType.Auto,))
+        sh = NamedSharding(mesh, P("d"))
+        def f(x):
+            return x.sum()  # forces all-reduce of partial sums
+        with jax.set_mesh(mesh):
+            t = jax.jit(f, in_shardings=sh).lower(
+                jax.ShapeDtypeStruct((1024, 256), jnp.float32)
+            ).compile().as_text()
+        a = analyze(t)
+        assert a["collective_total_bytes"] > 0, a
+        print("COLLECTIVES OK", a["collective_total_bytes"])
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src",
+                                       "PATH": os.environ.get("PATH", "")},
+                       timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "COLLECTIVES OK" in r.stdout

@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.clustering_loss import clustering_loss_pallas
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_scan import mamba2_scan
+
+TOLS = {jnp.float32: 2e-4, jnp.bfloat16: 3e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kvh,s,hd", [
+    (1, 2, 1, 128, 64),
+    (2, 4, 2, 256, 64),
+    (1, 8, 8, 256, 128),   # MHA
+    (2, 8, 2, 384, 80),    # danube head dim
+    (1, 4, 4, 256, 112),   # zamba shared-attn head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(b, h, kvh, s, hd, dtype):
+    rng = np.random.RandomState(b * 31 + h)
+    q = jnp.asarray(rng.randn(b, h, s, hd), dtype)
+    k = jnp.asarray(rng.randn(b, kvh, s, hd), dtype)
+    v = jnp.asarray(rng.randn(b, kvh, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOLS[dtype], rtol=TOLS[dtype])
+
+
+@pytest.mark.parametrize("window", [64, 128, 4096])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.RandomState(window)
+    q = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_non_causal():
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(2, 2, 128, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 2, 256, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 2, 256, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# clustering loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,q,d,m", [
+    (16, 64, 16, 4),
+    (64, 256, 32, 10),
+    (100, 512, 64, 7),     # non-multiple batch
+    (32, 1000, 128, 4),    # non-multiple queue
+])
+def test_clustering_loss_fwd_bwd(b, q, d, m):
+    rng = np.random.RandomState(b + q)
+    z = jnp.asarray(rng.randn(b, d), jnp.float32)
+    qz = jnp.asarray(rng.randn(q, d), jnp.float32)
+    pseudo = jnp.asarray(rng.randint(0, m, b), jnp.int32)
+    aok = jnp.asarray(rng.rand(b) > 0.2)
+    qlab = jnp.asarray(rng.randint(0, m, q), jnp.int32)
+    qconf = jnp.asarray(rng.rand(q) > 0.3)
+    qvalid = jnp.asarray(rng.rand(q) > 0.1)
+    args = (pseudo, aok, qz, qlab, qconf, qvalid)
+    loss_k = clustering_loss_pallas(z, *args, 0.1)
+    loss_r = ref.clustering_loss_ref(z, *args, 0.1)
+    assert abs(float(loss_k) - float(loss_r)) < 1e-4
+    gk = jax.grad(lambda zz: clustering_loss_pallas(zz, *args, 0.1))(z)
+    gr = jax.grad(lambda zz: ref.clustering_loss_ref(zz, *args, 0.1))(z)
+    np.testing.assert_allclose(gk, gr, atol=5e-5, rtol=2e-3)
+
+
+def test_clustering_loss_empty_queue_is_zero():
+    z = jnp.ones((4, 8))
+    qz = jnp.ones((16, 8))
+    zero = clustering_loss_pallas(
+        z, jnp.zeros(4, jnp.int32), jnp.ones(4, bool), qz,
+        jnp.zeros(16, jnp.int32), jnp.zeros(16, bool), jnp.zeros(16, bool),
+        0.1)
+    assert float(zero) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# mamba2 chunked scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,nh,hd,n,chunk", [
+    (1, 64, 2, 32, 16, 16),
+    (2, 128, 4, 64, 64, 32),
+    (1, 256, 2, 64, 64, 128),
+])
+def test_mamba2_scan_vs_sequential(b, s, nh, hd, n, chunk):
+    rng = np.random.RandomState(s)
+    x = jnp.asarray(rng.randn(b, s, nh, hd), jnp.float32)
+    dt = jnp.asarray(rng.rand(b, s, nh) * 0.5 + 0.01, jnp.float32)
+    A = -jnp.asarray(rng.rand(nh) * 0.9 + 0.1, jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    D = jnp.asarray(rng.rand(nh), jnp.float32)
+    want = ref.mamba2_scan_ref(x, dt, A, B, C, D)
+    got = mamba2_scan(x, dt, A, B, C, D, chunk=chunk)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM fused scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,nh,hd,bt", [
+    (2, 64, 2, 32, 16),
+    (1, 128, 4, 64, 64),
+    (2, 96, 2, 64, 32),   # S not a multiple of the default block
+])
+def test_slstm_scan_vs_sequential(b, s, nh, hd, bt):
+    from repro.kernels.slstm_scan import slstm_scan
+    rng = np.random.RandomState(s)
+    wx = jnp.asarray(rng.randn(b, s, 4, nh, hd) * 0.5, jnp.float32)
+    r = jnp.asarray(rng.randn(nh, hd, 4 * hd) / np.sqrt(hd), jnp.float32)
+    want = ref.slstm_scan_ref(wx, r)
+    got = slstm_scan(wx, r, block_t=bt)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_model_chunked_ssd_matches_oracle():
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.RandomState(0)
+    b, s, nh, hd, n = 2, 96, 2, 32, 16
+    x = jnp.asarray(rng.randn(b, s, nh, hd), jnp.float32)
+    dt = jnp.asarray(rng.rand(b, s, nh) * 0.3 + 0.01, jnp.float32)
+    A = -jnp.asarray(rng.rand(nh) + 0.1, jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    D = jnp.asarray(rng.rand(nh), jnp.float32)
+    want = ref.mamba2_scan_ref(x, dt, A, B, C, D)
+    got = ssd_chunked(x, dt, A, B, C, D, 32)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=5e-5)

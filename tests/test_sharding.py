@@ -1,0 +1,61 @@
+"""Partition-rule tests: every parameter of every architecture gets a spec
+whose rank matches the leaf and whose axes map correctly; client stacking
+prepends the data axes; the divisibility sanitizer only ever *removes*
+sharding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, smoke_config
+from repro.models import build_model
+from repro.sharding.specs import client_stack_pspecs, leaf_pspec, tree_pspecs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_every_param_gets_rank_matching_spec(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = tree_pspecs(params)
+    leaves = jax.tree.leaves(params)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert len(tuple(spec)) == leaf.ndim, (leaf.shape, spec)
+
+
+def test_attention_rules():
+    wq = jnp.zeros((64, 128))
+    path = (jax.tree_util.DictKey("attn"), jax.tree_util.DictKey("wq"))
+    assert tuple(leaf_pspec(path, wq)) == (None, "model")
+    wo = jnp.zeros((128, 64))
+    path = (jax.tree_util.DictKey("attn"), jax.tree_util.DictKey("wo"))
+    assert tuple(leaf_pspec(path, wo)) == ("model", None)
+
+
+def test_expert_rule_shards_expert_axis():
+    up = jnp.zeros((8, 64, 32))  # (E, d, ff)
+    path = (jax.tree_util.DictKey("moe"), jax.tree_util.DictKey("experts"),
+            jax.tree_util.DictKey("up"))
+    assert tuple(leaf_pspec(path, up)) == ("model", None, None)
+
+
+def test_stacked_layers_prepend_none():
+    wq = jnp.zeros((24, 64, 128))  # (L, d, H*hd)
+    path = (jax.tree_util.DictKey("stack"), jax.tree_util.DictKey("attn"),
+            jax.tree_util.DictKey("wq"))
+    assert tuple(leaf_pspec(path, wq)) == (None, None, "model")
+
+
+def test_client_stack_prepends_data_axes():
+    tree = {"attn": {"wq": jnp.zeros((4, 64, 128))}}  # (N_clients, d, H*hd)
+    specs = client_stack_pspecs(tree, ("pod", "data"))
+    assert tuple(specs["attn"]["wq"]) == (("pod", "data"), None, "model")
+
+
+def test_norms_replicated():
+    s = jnp.zeros((64,))
+    path = (jax.tree_util.DictKey("attn_norm"), jax.tree_util.DictKey("scale"))
+    assert tuple(leaf_pspec(path, s)) == (None,)
