@@ -6,6 +6,11 @@ record; derived = the benchmark's headline metric).
   PYTHONPATH=src python -m benchmarks.run            # full suite
   PYTHONPATH=src python -m benchmarks.run --quick
   PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny end-to-end
+
+``--smoke`` runs one tiny SemiSFL config end-to-end (real engine, real
+dispatched kernels, a few rounds) and writes ``BENCH_smoke.json`` — the
+per-push artifact CI uploads so the perf trajectory accumulates.
 """
 from __future__ import annotations
 
@@ -42,12 +47,57 @@ def _derived(rows: list[dict]) -> str:
     return "n/a"
 
 
+def run_smoke(out_dir: str) -> dict:
+    """Tiny config end-to-end: exercises the data pipeline, the engine's
+    vmapped multi-client round, the dispatched clustering kernel, and the
+    adaptation controller, in seconds.  Writes BENCH_smoke.json."""
+    from repro.kernels import dispatch
+
+    from benchmarks.common import build_system, make_rig, run_method
+
+    rounds = 3
+    log = lambda *a: print("#", *a)
+    rig = make_rig(n_labeled=32, n_total=256, n_test=64, n_clients=4,
+                   k_s=2, k_u=1, queue_len=64)
+    sys_ = build_system("semisfl", rig[0], 2)
+    # warm-up round on the same system: jit tracing/compilation happens
+    # here, so us_per_round below tracks engine time, not the compiler
+    run_method("semisfl", rounds=1, n_active=2, system=sys_, rig=rig,
+               log=log)
+    t0 = time.time()
+    res = run_method("semisfl", rounds=rounds, n_active=2, eval_every=2,
+                     system=sys_, rig=rig, log=log)
+    wall = time.time() - t0
+    rec = {
+        "benchmark": "smoke",
+        "method": "semisfl",
+        "rounds": rounds,
+        "final_acc": round(res.final_acc, 4),
+        "us_per_round": round(wall * 1e6 / rounds),
+        "wall_s": round(wall, 2),
+        "kernel_backend": dispatch.resolve(),
+        "jax_version": __import__("jax").__version__,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_smoke.json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"smoke,{rec['us_per_round']},final_acc={rec['final_acc']}",
+          flush=True)
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end run; writes BENCH_smoke.json")
     ap.add_argument("--out", default="reports/bench")
     args = ap.parse_args()
+    if args.smoke:
+        print("name,us_per_call,derived")
+        run_smoke(args.out)
+        return
     names = list(SUITES) if not args.only else args.only.split(",")
 
     os.makedirs(args.out, exist_ok=True)

@@ -39,6 +39,7 @@ from repro.core.split import (apply_projection_head, init_projection_head,
                               pool_features)
 from repro.data.augment import strong_augment, weak_augment
 from repro.data.pipeline import Loader, stack_client_batches
+from repro.kernels import clustering_loss as fused_clustering_loss
 from repro.models import build_model
 from repro.optim import apply_updates, sgd
 
@@ -120,7 +121,10 @@ class SemiSFLSystem:
         # ---------------- supervised step (PS, Alg.1 lines 4-5) ----------
         def supervised_step(state: SemiSFLState, x, y, step_idx):
             rng, k_aug = jax.random.split(state.rng)
-            xs = strong_augment(k_aug, x)
+            # labeled batches get the paper's weak augmentation a_w
+            # (FixMatch/SemiFL convention); strong aug is reserved for the
+            # student view of *unlabeled* data in semi_step below.
+            xs = weak_augment(k_aug, x)
             lr = self.lr_schedule(step_idx)
 
             def loss_fn(params):
@@ -191,8 +195,12 @@ class SemiSFLSystem:
                 if self.use_clustering:
                     z = apply_projection_head(proj, cfg,
                                               pool_features(cfg, feats_flat))
-                    c = losses.clustering_loss(
-                        z, pseudo, jnp.ones_like(conf_ok), queue.z,
+                    # dispatched Eq. (5): Mosaic on TPU, jnp reference on
+                    # CPU.  Anchors are confidence-gated (conf_ok) per the
+                    # paper: an unlabeled sample only joins clustering once
+                    # its pseudo-label q_j clears tau.
+                    c = fused_clustering_loss(
+                        z, pseudo, conf_ok, queue.z,
                         queue.label, queue.conf, queue.valid, s.temperature)
                 return h + c, (h, c)
 

@@ -19,8 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.compat import pallas_compiler_params, pl, pltpu
 
 Array = jax.Array
 
@@ -157,7 +156,7 @@ def _run_fwd(z, pseudo, aok, qz, qlab, qmask, inv_temp, block_b, block_q,
         out_shape=[jax.ShapeDtypeStruct((b_pad, 128), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((bb, 128), jnp.float32)] * 4,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(z, pseudo, aok, qz, qlab, qmask)
     pos_sum, n_pos, lse = (o[:b, 0] for o in outs)
@@ -200,7 +199,7 @@ def _run_bwd(z, pseudo, aok, qz, qlab, qmask, lse, n_pos, gscale, inv_temp,
         out_shape=jax.ShapeDtypeStruct((b_pad, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bb, d), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(zp, pseudo, aok, qzp, qlab, qmask, pad128(lse), pad128(n_pos),
       pad128(gscale))

@@ -16,8 +16,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.compat import pallas_compiler_params, pl, pltpu
 
 Array = jax.Array
 
@@ -102,7 +101,7 @@ def mamba2_scan(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
         out_shape=jax.ShapeDtypeStruct((b, nh, nc, c, hd), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, hd), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(xt, dtt, A.astype(jnp.float32), Bt, Ct, D.astype(jnp.float32))
     return y.reshape(b, nh, S, hd).transpose(0, 2, 1, 3)

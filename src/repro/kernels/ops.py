@@ -1,62 +1,94 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public wrappers over the fused kernels, routed through
+``repro.kernels.dispatch``.
 
-``interpret`` defaults to True because this container is CPU-only (the
-kernel bodies execute in Python on CPU); on a real TPU runtime pass
-``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) to compile the kernels
-to Mosaic.  The wrappers pick hardware-aligned block sizes and fall back to
-the jnp reference for shapes below kernel granularity."""
+Each wrapper keeps its original signature; the backend is selected by the
+``REPRO_KERNEL_BACKEND`` knob (auto -> Mosaic-compiled Pallas on TPU, the
+jnp reference on CPU), overridable per call via ``backend=`` or the legacy
+``interpret=`` flag.  Shapes below kernel granularity always take the
+reference path, whatever the backend.
+"""
 from __future__ import annotations
 
-import os
-
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.clustering_loss import clustering_loss_pallas
+from repro.kernels import dispatch, ref
+from repro.kernels.clustering_loss import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_Q,
+                                           clustering_loss_pallas)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba2_scan import mamba2_scan as _mamba2
+from repro.kernels.slstm_scan import slstm_scan as _slstm
 
 Array = jax.Array
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def _flash_supported(q, k, v, *, causal=True, window=0):
+    sq, skv = q.shape[2], k.shape[2]
+    return (sq >= 128 and skv >= 128
+            and sq % 128 == 0 and skv % 128 == 0)
+
+
+def _clustering_pallas(z, pseudo, anchor_ok, queue_z, queue_label,
+                       queue_conf, queue_valid, temperature, *,
+                       interpret: bool):
+    # custom_vjp: block sizes / interpret are nondiff and must be positional
+    return clustering_loss_pallas(z, pseudo, anchor_ok, queue_z, queue_label,
+                                  queue_conf, queue_valid, temperature,
+                                  DEFAULT_BLOCK_B, DEFAULT_BLOCK_Q, interpret)
+
+
+def _slstm_pallas(wx, r, *, block_t: int = 64, interpret: bool):
+    return _slstm(wx, r, block_t=block_t, interpret=interpret)
+
+
+def _mamba2_ref(x, dt, A, B, C, D, *, chunk: int = 128):
+    del chunk  # reference scan is sequential; chunking is a Pallas concern
+    return ref.mamba2_scan_ref(x, dt, A, B, C, D)
+
+
+def _slstm_ref(wx, r, *, block_t: int = 64):
+    del block_t
+    return ref.slstm_scan_ref(wx, r)
+
+
+dispatch.register("flash_attention", ref=ref.flash_attention_ref,
+                  pallas=_flash, supports=_flash_supported)
+dispatch.register("clustering_loss", ref=ref.clustering_loss_ref,
+                  pallas=_clustering_pallas)
+dispatch.register("mamba2_scan", ref=_mamba2_ref, pallas=_mamba2,
+                  supports=lambda x, *a, **kw: x.shape[1] >= 16)
+dispatch.register("slstm_scan", ref=_slstm_ref, pallas=_slstm_pallas,
+                  supports=lambda wx, *a, **kw: wx.shape[1] >= 8)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    window: int = 0, interpret: bool | None = None) -> Array:
+                    window: int = 0, interpret: bool | None = None,
+                    backend: str | None = None) -> Array:
     """(B, H, Sq, hd) x (B, KVH, Skv, hd) -> (B, H, Sq, hd)."""
-    interpret = _INTERPRET if interpret is None else interpret
-    sq, skv = q.shape[2], k.shape[2]
-    if sq < 128 or skv < 128 or sq % 128 or skv % 128:
-        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
-    return _flash(q, k, v, causal=causal, window=window, interpret=interpret)
+    return dispatch.call("flash_attention", q, k, v, causal=causal,
+                         window=window, interpret=interpret, backend=backend)
 
 
 def clustering_loss(z: Array, pseudo: Array, anchor_ok: Array, queue_z: Array,
                     queue_label: Array, queue_conf: Array, queue_valid: Array,
-                    temperature: float, *,
-                    interpret: bool | None = None) -> Array:
+                    temperature: float, *, interpret: bool | None = None,
+                    backend: str | None = None) -> Array:
     """Fused Eq. (5); differentiable w.r.t. z (queue is stop-gradient)."""
-    interpret = _INTERPRET if interpret is None else interpret
-    return clustering_loss_pallas(z, pseudo, anchor_ok, queue_z, queue_label,
-                                  queue_conf, queue_valid, temperature,
-                                  128, 512, interpret)
+    return dispatch.call("clustering_loss", z, pseudo, anchor_ok, queue_z,
+                         queue_label, queue_conf, queue_valid, temperature,
+                         interpret=interpret, backend=backend)
 
 
 def mamba2_scan(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
-                *, chunk: int = 128, interpret: bool | None = None) -> Array:
-    interpret = _INTERPRET if interpret is None else interpret
-    if x.shape[1] < 16:
-        return ref.mamba2_scan_ref(x, dt, A, B, C, D)
-    return _mamba2(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
+                *, chunk: int = 128, interpret: bool | None = None,
+                backend: str | None = None) -> Array:
+    return dispatch.call("mamba2_scan", x, dt, A, B, C, D, chunk=chunk,
+                         interpret=interpret, backend=backend)
 
 
 def slstm_scan(wx: Array, r: Array, *, block_t: int = 64,
-               interpret: bool | None = None) -> Array:
+               interpret: bool | None = None,
+               backend: str | None = None) -> Array:
     """Fused sLSTM recurrence (R resident in VMEM across time steps).
     wx: (B, S, 4, nh, hd); r: (nh, hd, 4*hd) -> h (B, S, nh, hd)."""
-    from repro.kernels.slstm_scan import slstm_scan as _slstm
-    interpret = _INTERPRET if interpret is None else interpret
-    if wx.shape[1] < 8:
-        return ref.slstm_scan_ref(wx, r)
-    return _slstm(wx, r, block_t=block_t, interpret=interpret)
+    return dispatch.call("slstm_scan", wx, r, block_t=block_t,
+                         interpret=interpret, backend=backend)

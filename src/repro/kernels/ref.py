@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+NEG_INF = -1e30
+
 
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
                         window: int = 0) -> Array:
@@ -40,10 +42,26 @@ def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
 def clustering_loss_ref(z: Array, pseudo: Array, anchor_ok: Array,
                         queue_z: Array, queue_label: Array, queue_conf: Array,
                         queue_valid: Array, temperature: float) -> Array:
-    """Eq. (5) oracle — identical math to repro.core.losses.clustering_loss."""
-    from repro.core.losses import clustering_loss
-    return clustering_loss(z, pseudo, anchor_ok, queue_z, queue_label,
-                           queue_conf, queue_valid, temperature)
+    """Eq. (5) oracle — same math as ``repro.core.losses.clustering_loss``
+    (checked by tests/test_dispatch_parity.py), kept dependency-free so the
+    reference backend never re-enters the core package.
+
+    Anchors = projected student features (anchor_ok gates usable pseudo-
+    labels); positives = confident same-pseudo-label queue entries; the
+    softmax denominator runs over every valid queue entry."""
+    zf = z.astype(jnp.float32)
+    rf = jax.lax.stop_gradient(queue_z.astype(jnp.float32))
+    logits = (zf @ rf.T) / temperature                       # (B, Q)
+    logits = jnp.where(queue_valid[None, :], logits, NEG_INF)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    pos = (pseudo[:, None] == queue_label[None, :]) & queue_conf[None, :]
+    pos = pos & anchor_ok[:, None] & queue_valid[None, :]
+    n_pos = pos.sum(axis=-1)
+    per_anchor = -(jnp.where(pos, logp, 0.0).sum(axis=-1)
+                   / jnp.maximum(n_pos, 1))
+    has_pos = n_pos > 0
+    denom = jnp.maximum(has_pos.sum(), 1)
+    return jnp.where(has_pos, per_anchor, 0.0).sum() / denom
 
 
 def slstm_scan_ref(wx: Array, r: Array) -> Array:

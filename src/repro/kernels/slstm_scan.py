@@ -19,8 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.compat import pallas_compiler_params, pl, pltpu
 
 Array = jax.Array
 
@@ -88,7 +87,7 @@ def slstm_scan(wx: Array, r: Array, *, block_t: int = DEFAULT_BLOCK_T,
         out_shape=jax.ShapeDtypeStruct((b, nh, s // bt, bt, hd), wx.dtype),
         scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32)] * 4,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(wxl, r)
     return out.reshape(b, nh, s, hd).transpose(0, 2, 1, 3)

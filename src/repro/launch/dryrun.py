@@ -33,6 +33,7 @@ import traceback
 import jax
 import numpy as np
 
+from repro.compat import cost_analysis, use_mesh
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.launch.hlo_cost import analyze as hlo_analyze
 from repro.launch.mesh import make_production_mesh
@@ -114,7 +115,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     specs = input_specs(plan)
     shardings = arg_shardings(plan, mesh, specs)
     args, arg_sh = _flatten_args(plan, specs, shardings)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(step, in_shardings=arg_sh)
         lowered = jitted.lower(*args)
         t1 = time.time()
@@ -122,7 +123,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)   # dict on every JAX generation
     hlo = compiled.as_text()
     ana = hlo_analyze(hlo)   # trip-count-aware (see hlo_cost.py)
     hlo_dir = os.environ.get("REPRO_HLO_DIR")

@@ -4,26 +4,29 @@ Defined as functions — importing this module never touches JAX device
 state.  Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice);
 multi-pod: (pod=2, data=16, model=16) = 512 chips, the ``pod`` axis being
 an outer data-parallel axis (client groups / gradient all-reduce span it).
+
+Mesh construction goes through ``repro.compat`` so the same code runs on
+JAX 0.4.37 (no ``axis_types``) and current JAX.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model: int = 1):
     """Whatever this host actually has (CPU tests / examples)."""
     n = len(jax.devices())
     data = max(1, n // model)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def mesh_axes(mesh) -> tuple[tuple[str, ...], str]:

@@ -24,6 +24,7 @@ import time
 import jax
 import numpy as np
 
+from repro.compat import use_mesh
 from repro.configs import INPUT_SHAPES, get_config
 from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.launch.hlo_cost import analyze as hlo_analyze
@@ -53,7 +54,7 @@ def run_variant(arch: str, shape_name: str, variant: dict,
             arg_sh = (shardings["params"], shardings["batch"],
                       shardings["cache"])
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = jax.jit(step, in_shardings=arg_sh).lower(
                 *args).compile()
         dt = time.time() - t0

@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import losses
+from repro.kernels import clustering_loss as fused_clustering_loss
 from repro.core.ema import ema_update
 from repro.core.queue import FeatureQueue, enqueue, init_queue
 from repro.core.split import apply_projection_head, init_projection_head, pool_features
@@ -372,7 +373,8 @@ def make_train_step(plan: StepPlan, dist: DistContext,
                 h = losses.cross_entropy(out["logits"], pseudo_tok,
                                          mask=ok_tok)
             z = apply_projection_head(proj, cfg, pool_features(cfg, feats_f))
-            c = losses.clustering_loss(
+            # dispatched Eq. (5): Mosaic kernel on TPU, jnp reference on CPU
+            c = fused_clustering_loss(
                 z, pseudo_seq, conf_seq, queue.z, queue.label, queue.conf,
                 queue.valid, s.temperature)
             aux = jnp.sum(out["aux_loss"]) * 0.001

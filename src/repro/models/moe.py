@@ -23,7 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.models.common import Params, apply_mlp, dense_init, init_mlp

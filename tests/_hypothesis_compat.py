@@ -1,0 +1,75 @@
+"""Use hypothesis when installed; otherwise a minimal deterministic
+stand-in so the property-test modules still collect and run.
+
+The fallback implements exactly the surface these tests use — ``given``
+with positional strategies, ``settings.register_profile/load_profile``
+(honoring ``max_examples``), and ``strategies.floats/integers`` — drawing
+seeded pseudo-random examples plus the interval endpoints.  It does no
+shrinking and no example database; install hypothesis (as CI does) for the
+real search.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample, endpoints):
+            self.sample = sample
+            self.endpoints = endpoints
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                (float(min_value), float(max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)),
+                (int(min_value), int(max_value)))
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors the hypothesis name
+        _profiles: dict = {"default": 10}
+        max_examples = 10
+
+        def __init__(self, **_kw):
+            pass
+
+        @classmethod
+        def register_profile(cls, name, max_examples=10, **_kw):
+            cls._profiles[name] = max_examples
+
+        @classmethod
+        def load_profile(cls, name):
+            cls.max_examples = cls._profiles.get(name, 10)
+
+    def given(*strategies):  # noqa: ANN001
+        def deco(fn):
+            def wrapper():
+                # endpoints first (the classic boundary bugs), then seeded
+                # random draws; deterministic per test function.
+                for combo in zip(*(s.endpoints for s in strategies)):
+                    fn(*combo)
+                rng = np.random.RandomState(
+                    zlib.crc32(fn.__name__.encode()) & 0x7FFFFFFF)
+                for _ in range(max(settings.max_examples - 2, 1)):
+                    fn(*(s.sample(rng) for s in strategies))
+            # NOT functools.wraps: the wrapper must present a zero-arg
+            # signature or pytest would treat the drawn params as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -6,6 +6,27 @@ import pytest
 # 512 placeholder devices (and only in its own process).
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tpu: needs real TPU hardware (Mosaic-compiled Pallas); "
+        "auto-skipped when jax.default_backend() is not 'tpu'")
+
+
+def pytest_collection_modifyitems(config, items):
+    if not any(item.get_closest_marker("tpu") for item in items):
+        return
+    from repro.compat import is_tpu
+    if is_tpu():
+        return
+    skip = pytest.mark.skip(
+        reason="requires TPU (jax default backend is "
+               "not 'tpu'; compiled-Pallas path untestable here)")
+    for item in items:
+        if item.get_closest_marker("tpu"):
+            item.add_marker(skip)
+
+
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)

@@ -1,0 +1,309 @@
+"""The JAX portability layer: symbol resolution under both API
+generations (faked — independent of the installed JAX), the kernel
+backend knob, and the mesh-context shim against the real JAX."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.kernels import dispatch
+
+
+# ---------------------------------------------------------------------------
+# shard_map resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_shard_map_new_api_check_vma():
+    def new_style(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return ("new", f, mesh, check_vma)
+
+    fake = types.SimpleNamespace(shard_map=new_style)
+    fn, kw = compat.resolve_shard_map(fake)
+    assert fn is new_style
+    assert kw == "check_vma"
+
+
+def test_resolve_shard_map_top_level_but_old_kwarg():
+    # a mid-generation jax: top-level shard_map that still says check_rep
+    def mid_style(f, *, mesh, in_specs, out_specs, check_rep=True):
+        return ("mid", check_rep)
+
+    fn, kw = compat.resolve_shard_map(types.SimpleNamespace(
+        shard_map=mid_style))
+    assert fn is mid_style
+    assert kw == "check_rep"
+
+
+def test_resolve_shard_map_legacy_fallback():
+    # no top-level shard_map at all -> the experimental one, check_rep.
+    # Only reachable on a JAX that still ships the experimental module
+    # (real 0.4.x always does); skip where it has been removed.
+    legacy_mod = pytest.importorskip(
+        "jax.experimental.shard_map",
+        reason="this JAX no longer has the legacy shard_map module")
+    fn, kw = compat.resolve_shard_map(types.SimpleNamespace())
+    assert fn is legacy_mod.shard_map
+    assert kw == "check_rep"
+
+
+def test_shard_map_wrapper_runs_on_installed_jax():
+    mesh = compat.make_mesh((1,), ("d",),
+                            axis_types=(compat.AxisType.Auto,))
+    out = compat.shard_map(
+        lambda x: x * 2, mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec(),),
+        out_specs=jax.sharding.PartitionSpec(),
+        check_vma=False)(jnp.arange(4.0))
+    np.testing.assert_allclose(out, 2.0 * np.arange(4.0))
+
+
+# ---------------------------------------------------------------------------
+# make_mesh / AxisType
+# ---------------------------------------------------------------------------
+
+def test_make_mesh_drops_axis_types_on_old_signature():
+    calls = {}
+
+    def old_make(axis_shapes, axis_names):  # 0.4.x: no axis_types kwarg
+        calls["args"] = (axis_shapes, axis_names)
+        return "mesh"
+
+    assert not compat.supports_axis_types(old_make)
+    out = compat.make_mesh((2, 2), ("a", "b"),
+                           axis_types=(compat.AxisType.Auto,) * 2,
+                           _make=old_make)
+    assert out == "mesh"
+    assert calls["args"] == ((2, 2), ("a", "b"))
+
+
+def test_make_mesh_passes_axis_types_on_new_signature():
+    calls = {}
+
+    def new_make(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        calls["axis_types"] = axis_types
+        return "mesh"
+
+    assert compat.supports_axis_types(new_make)
+    types_ = (compat.AxisType.Auto, compat.AxisType.Auto)
+    compat.make_mesh((2, 2), ("a", "b"), axis_types=types_, _make=new_make)
+    assert calls["axis_types"] == types_
+
+
+def test_axis_type_has_auto_member():
+    assert hasattr(compat.AxisType, "Auto")
+
+
+def test_make_mesh_real_jax_single_device():
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    assert mesh.axis_names == ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# use_mesh
+# ---------------------------------------------------------------------------
+
+def test_use_mesh_prefers_set_mesh():
+    entered = []
+
+    class _Cm:
+        def __enter__(self):
+            entered.append("enter")
+            return self
+
+        def __exit__(self, *a):
+            entered.append("exit")
+            return False
+
+    fake = types.SimpleNamespace(set_mesh=lambda mesh: _Cm())
+    with compat.use_mesh("mesh-object", _jax=fake):
+        assert entered == ["enter"]
+    assert entered == ["enter", "exit"]
+
+
+def test_use_mesh_bare_setter_is_undone_on_exit():
+    calls = []
+    fake = types.SimpleNamespace(set_mesh=lambda mesh: calls.append(mesh))
+    with compat.use_mesh("mesh-object", _jax=fake):
+        assert calls == ["mesh-object"]
+    assert calls == ["mesh-object", None]  # cleared on exit
+
+
+def test_use_mesh_falls_back_to_mesh_context_manager():
+    entered = []
+
+    class _Mesh:
+        def __enter__(self):
+            entered.append("enter")
+            return self
+
+        def __exit__(self, *a):
+            entered.append("exit")
+            return False
+
+    fake = types.SimpleNamespace(sharding=types.SimpleNamespace())
+    with compat.use_mesh(_Mesh(), _jax=fake):
+        pass
+    assert entered == ["enter", "exit"]
+
+
+def test_use_mesh_real_jax():
+    mesh = compat.make_mesh((1,), ("d",))
+    with compat.use_mesh(mesh) as m:
+        assert m is mesh
+        # jit under the ambient mesh still works
+        assert float(jax.jit(lambda x: x + 1)(jnp.float32(1.0))) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# pallas compiler params
+# ---------------------------------------------------------------------------
+
+def test_pallas_compiler_params_old_and_new_names():
+    class NewParams:
+        def __init__(self, dimension_semantics=None):
+            self.dimension_semantics = dimension_semantics
+
+    class OldParams(NewParams):
+        pass
+
+    new_mod = types.SimpleNamespace(CompilerParams=NewParams)
+    old_mod = types.SimpleNamespace(TPUCompilerParams=OldParams)
+    got_new = compat.pallas_compiler_params(
+        new_mod, dimension_semantics=("parallel",))
+    got_old = compat.pallas_compiler_params(
+        old_mod, dimension_semantics=("parallel",))
+    assert isinstance(got_new, NewParams)
+    assert isinstance(got_old, OldParams)
+    assert got_old.dimension_semantics == ("parallel",)
+
+
+def test_pallas_compiler_params_drops_unknown_fields():
+    class Strict:
+        def __init__(self, known=None):
+            self.known = known
+
+    mod = types.SimpleNamespace(CompilerParams=Strict)
+    got = compat.pallas_compiler_params(mod, known=1, unknown_field=2)
+    assert got.known == 1
+
+
+def test_pallas_compiler_params_real_jax():
+    got = compat.pallas_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    if compat.HAS_PALLAS_TPU:
+        assert got is not None
+    else:
+        assert got is None
+
+
+# ---------------------------------------------------------------------------
+# cost_analysis
+# ---------------------------------------------------------------------------
+
+def test_cost_analysis_dict_under_both_generations():
+    class OldCompiled:  # 0.4.x: list of dicts
+        def cost_analysis(self):
+            return [{"flops": 7.0}]
+
+    class NewCompiled:  # current: plain dict
+        def cost_analysis(self):
+            return {"flops": 7.0}
+
+    assert compat.cost_analysis(OldCompiled()) == {"flops": 7.0}
+    assert compat.cost_analysis(NewCompiled()) == {"flops": 7.0}
+
+
+def test_cost_analysis_real_jax():
+    compiled = jax.jit(lambda x: x @ x).lower(
+        jnp.ones((8, 8), jnp.float32)).compile()
+    cost = compat.cost_analysis(compiled)
+    assert isinstance(cost, dict)
+    assert cost.get("flops", 0.0) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# kernel backend knob
+# ---------------------------------------------------------------------------
+
+def test_backend_env_knob(monkeypatch):
+    monkeypatch.setattr(dispatch, "_override", None)
+    for value in ("ref", "interpret", "pallas", "auto"):
+        monkeypatch.setenv(dispatch.ENV_VAR, value)
+        assert dispatch.get_backend() == value
+    monkeypatch.delenv(dispatch.ENV_VAR)
+    assert dispatch.get_backend() == "auto"
+
+
+def test_backend_unknown_value_is_a_clear_error(monkeypatch):
+    monkeypatch.setattr(dispatch, "_override", None)
+    monkeypatch.setenv(dispatch.ENV_VAR, "cuda")
+    with pytest.raises(ValueError) as err:
+        dispatch.get_backend()
+    msg = str(err.value)
+    assert "cuda" in msg and "REPRO_KERNEL_BACKEND" in msg
+    for valid in dispatch.VALID_BACKENDS:
+        assert valid in msg
+
+
+def test_backend_auto_resolves_to_ref_on_cpu(monkeypatch):
+    monkeypatch.setattr(dispatch, "_override", None)
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    expected = "pallas" if compat.is_tpu() else "ref"
+    assert dispatch.resolve() == expected
+
+
+def test_backend_context_manager_restores(monkeypatch):
+    monkeypatch.setattr(dispatch, "_override", None)
+    with dispatch.backend("ref"):
+        assert dispatch.get_backend() == "ref"
+        assert dispatch.resolve() == "ref"
+    assert dispatch.get_backend() == "auto"
+
+
+def test_dispatch_routes_per_backend(monkeypatch):
+    seen = []
+    dispatch.register(
+        "_test_kernel",
+        ref=lambda x: seen.append("ref") or x,
+        pallas=lambda x, interpret: seen.append(
+            "interpret" if interpret else "pallas") or x)
+    try:
+        dispatch.call("_test_kernel", 1, backend="ref")
+        if compat.HAS_PALLAS_TPU:
+            dispatch.call("_test_kernel", 1, backend="interpret")
+            dispatch.call("_test_kernel", 1, backend="pallas")
+            assert seen == ["ref", "interpret", "pallas"]
+        else:
+            assert seen == ["ref"]
+    finally:
+        dispatch._REGISTRY.pop("_test_kernel")
+
+
+def test_dispatch_supports_predicate_forces_ref():
+    seen = []
+    dispatch.register(
+        "_test_small", ref=lambda x: seen.append("ref"),
+        pallas=lambda x, interpret: seen.append("pallas"),
+        supports=lambda x: False)
+    try:
+        dispatch.call("_test_small", 1, backend="interpret")
+        assert seen == ["ref"]
+    finally:
+        dispatch._REGISTRY.pop("_test_small")
+
+
+def test_dispatch_unknown_kernel_is_a_clear_error():
+    with pytest.raises(KeyError) as err:
+        dispatch.call("no_such_kernel", 1)
+    assert "no_such_kernel" in str(err.value)
+
+
+def test_all_five_kernel_modules_are_dispatched():
+    import repro.kernels  # noqa: F401 — ops.py registers on import
+    assert set(dispatch.registered()) >= {
+        "clustering_loss", "flash_attention", "mamba2_scan", "slstm_scan"}

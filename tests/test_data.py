@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import (Loader, dirichlet_partition, make_image_dataset,
                         make_lm_dataset, partition_stats, strong_augment,

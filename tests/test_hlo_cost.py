@@ -77,13 +77,14 @@ def test_collective_bytes_counted():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, use_mesh
         from repro.launch.hlo_cost import analyze
-        mesh = jax.make_mesh((4,), ("d",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("d",), axis_types=(AxisType.Auto,))
         sh = NamedSharding(mesh, P("d"))
         def f(x):
             return x.sum()  # forces all-reduce of partial sums
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             t = jax.jit(f, in_shardings=sh).lower(
                 jax.ShapeDtypeStruct((1024, 256), jnp.float32)
             ).compile().as_text()
@@ -91,9 +92,12 @@ def test_collective_bytes_counted():
         assert a["collective_total_bytes"] > 0, a
         print("COLLECTIVES OK", a["collective_total_bytes"])
     """)
+    # JAX_PLATFORMS=cpu: forced host-device simulation must not probe for
+    # real accelerators (a multi-minute hang on hosts with libtpu).
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, env={"PYTHONPATH": "src",
-                                       "PATH": os.environ.get("PATH", "")},
+                                       "PATH": os.environ.get("PATH", ""),
+                                       "JAX_PLATFORMS": "cpu"},
                        timeout=300)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "COLLECTIVES OK" in r.stdout

@@ -37,7 +37,10 @@ def test_semisfl_learns_and_beats_init():
     ctrl = make_controller(cfg, 100, len(train.y))
     acc0 = sys_.evaluate(state, test.x, test.y)
     f_s = []
-    for r in range(8):
+    # 12 rounds: the semi-supervised terms are inert until teacher
+    # pseudo-labels clear tau (~round 7 on this rig); the learning signal
+    # the test asserts shows up right after.
+    for r in range(12):
         state, m = sys_.run_round(state, lab, cls, ctrl)
         f_s.append(m.f_s)
     acc1 = sys_.evaluate(state, test.x, test.y)
@@ -88,8 +91,12 @@ def test_checkpoint_rejects_shape_mismatch(tmp_path):
 
 def test_fedswitch_sl_is_semisfl_without_clustering():
     """The ablation wiring: FedSwitch-SL must run the same engine with the
-    clustering/supcon terms disabled (loss values differ)."""
+    clustering/supcon terms disabled (loss values differ).  tau=0 so every
+    anchor passes the confidence gate and the clustering term is nonzero
+    already in round 1 (with the paper's tau it is inert early — see
+    test_semisfl_learns_and_beats_init)."""
     cfg, train, test, lab, cls = _rig(n=600)
+    cfg = replace(cfg, semisfl=replace(cfg.semisfl, confidence_threshold=0.0))
     full = SemiSFLSystem(cfg, n_clients_per_round=2)
     abl = make_fedswitch_sl(cfg, n_clients_per_round=2)
     assert full.use_clustering and not abl.use_clustering

@@ -1,8 +1,9 @@
 """MoE expert-parallel path vs dense oracle.
 
 The EP path needs >1 model-axis devices, so the equivalence check runs in a
-subprocess with XLA_FLAGS forcing 8 host devices (smoke tests in this
-process must keep seeing 1 device)."""
+subprocess with XLA_FLAGS forcing 4 host devices (smoke tests in this
+process must keep seeing 1 device; 4 keeps the all_to_all compile fast
+enough for CI while still exercising data- and model-axis sharding)."""
 import subprocess
 import sys
 import textwrap
@@ -11,10 +12,10 @@ import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from dataclasses import replace
-    from jax.sharding import AxisType
+    from repro.compat import AxisType, make_mesh, use_mesh
     from repro.configs import smoke_config
     from repro.models import build_model
     from repro.models.moe import (DistContext, apply_moe_dense, apply_moe_ep,
@@ -24,14 +25,14 @@ SCRIPT = textwrap.dedent("""
     # high capacity so nothing drops -> EP must equal dense exactly
     cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0,
                                    num_experts=4, top_k=2))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     dist = DistContext(mesh=mesh, data_axes=("data",), model_axis="model",
                        moe_impl="ep")
     p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(4, 16, cfg.d_model), jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y_ep, aux_ep = jax.jit(lambda p, x: apply_moe_ep(p, cfg, x, dist))(p, x)
     y_d, aux_d = apply_moe_dense(p, cfg, x)
     err = float(jnp.max(jnp.abs(y_ep - y_d)))
@@ -45,9 +46,13 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_moe_ep_matches_dense_multidevice():
+    # JAX_PLATFORMS=cpu: the forced host-device simulation is a CPU test;
+    # without the pin, jax probes for real accelerators (a ~8 min hang on
+    # hosts with libtpu installed).
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, env={"PYTHONPATH": "src",
-                                       "PATH": "/usr/bin:/bin"},
+                                       "PATH": "/usr/bin:/bin",
+                                       "JAX_PLATFORMS": "cpu"},
                        cwd=".", timeout=600)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "EP==DENSE OK" in r.stdout
