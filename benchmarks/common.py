@@ -53,7 +53,7 @@ class BenchResult:
 def make_rig(*, arch="paper-cnn", n_labeled=100, n_total=2400, n_test=300,
              n_clients=10, dirichlet=0.0, seed=0, k_s=15, k_u=4,
              queue_len=512, labeled_batch=32, client_batch=16,
-             overrides=None):
+             overrides=None, arch_overrides=None):
     cfg = smoke_config(arch)
     # bench-scale adaptation cadence: the paper's observation periods (10
     # rounds x 10-period window) assume 1000-round runs; scale to ~20-round
@@ -63,6 +63,8 @@ def make_rig(*, arch="paper-cnn", n_labeled=100, n_total=2400, n_test=300,
     if overrides:
         semi = replace(semi, **overrides)
     cfg = replace(cfg, semisfl=semi)
+    if arch_overrides:
+        cfg = replace(cfg, **arch_overrides)
     ds = make_image_dataset(seed, num_classes=cfg.num_classes,
                             n=n_total + n_test, image_size=cfg.image_size)
     train, test = train_test_split(ds, n_test, seed=seed)
@@ -80,11 +82,13 @@ def make_rig(*, arch="paper-cnn", n_labeled=100, n_total=2400, n_test=300,
     return cfg, train, test, lab, cls
 
 
-def build_system(method: str, cfg, n_active: int):
+def build_system(method: str, cfg, n_active: int, scan_rounds=None):
     if method == "semisfl":
-        return SemiSFLSystem(cfg, n_clients_per_round=n_active)
+        return SemiSFLSystem(cfg, n_clients_per_round=n_active,
+                             scan_rounds=scan_rounds)
     if method == "fedswitch-sl":
-        return make_fedswitch_sl(cfg, n_clients_per_round=n_active)
+        return make_fedswitch_sl(cfg, n_clients_per_round=n_active,
+                                 scan_rounds=scan_rounds)
     return BASELINES[method](cfg, n_clients_per_round=n_active)
 
 

@@ -71,4 +71,15 @@ class FreqController:
     def state_dict(self) -> dict:
         return {"k_s": self.k_s, "indicators": list(self._indicators),
                 "period_fs": list(self._period_fs),
-                "period_fu": list(self._period_fu)}
+                "period_fu": list(self._period_fu),
+                "fs_acc": list(self._fs_acc), "fu_acc": list(self._fu_acc)}
+
+    def load_state_dict(self, d: dict) -> None:
+        """Inverse of :meth:`state_dict`: a restored controller continues
+        the Eq. (9)/(10) trajectory exactly where the saved one stopped."""
+        self.k_s = int(d["k_s"])
+        self._indicators = list(d["indicators"])
+        self._period_fs = list(d["period_fs"])
+        self._period_fu = list(d["period_fu"])
+        self._fs_acc = list(d.get("fs_acc", []))
+        self._fu_acc = list(d.get("fu_acc", []))

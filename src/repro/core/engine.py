@@ -22,8 +22,8 @@ vmap over clients inside one jitted step (on the production mesh that axis
 shards over the data axes; the FedAvg becomes an all-reduce)."""
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+import os
+from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -35,15 +35,22 @@ from repro.core import losses
 from repro.core.adaptation import FreqController
 from repro.core.ema import ema_update
 from repro.core.queue import FeatureQueue, enqueue, init_queue
+from repro.core.scan import scan_phase
 from repro.core.split import (apply_projection_head, init_projection_head,
                               pool_features)
 from repro.data.augment import strong_augment, weak_augment
-from repro.data.pipeline import Loader, stack_client_batches
+from repro.data.pipeline import (Loader, stack_client_batches,
+                                 stack_client_batches_many)
 from repro.kernels import clustering_loss as fused_clustering_loss
 from repro.models import build_model
 from repro.optim import apply_updates, sgd
 
 Array = jax.Array
+
+
+def _scan_rounds_default() -> bool:
+    return os.environ.get("REPRO_SCAN_ROUNDS", "1").lower() not in (
+        "0", "false", "off")
 
 
 class SemiSFLState(NamedTuple):
@@ -53,6 +60,8 @@ class SemiSFLState(NamedTuple):
     queue: FeatureQueue
     rng: Array
     round: Array
+    step: Array        # cumulative optimizer step (supervised + cross-entity)
+                       # — drives the LR schedule; survives K_s adaptation
 
 
 @dataclass
@@ -71,7 +80,8 @@ class SemiSFLSystem:
                  lr: float = 0.02, momentum: float = 0.9,
                  lr_schedule: Optional[Callable] = None,
                  use_clustering: bool = True,
-                 use_supcon: bool = True):
+                 use_supcon: bool = True,
+                 scan_rounds: Optional[bool] = None):
         self.cfg = cfg
         self.s = cfg.semisfl
         self.model = build_model(cfg)
@@ -80,6 +90,11 @@ class SemiSFLSystem:
         self.lr_schedule = lr_schedule or (lambda step: jnp.float32(lr))
         self.use_clustering = use_clustering
         self.use_supcon = use_supcon
+        # scan-compiled round executor (default); the eager per-step path
+        # stays available for parity testing (REPRO_SCAN_ROUNDS=0 flips the
+        # default process-wide).
+        self.scan_rounds = (_scan_rounds_default() if scan_rounds is None
+                            else scan_rounds)
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -96,6 +111,7 @@ class SemiSFLSystem:
             queue=init_queue(self.s.queue_len, self._proj_dim()),
             rng=k3,
             round=jnp.zeros((), jnp.int32),
+            step=jnp.zeros((), jnp.int32),
         )
 
     def _proj_dim(self):
@@ -119,13 +135,18 @@ class SemiSFLSystem:
         cfg, s = self.cfg, self.s
 
         # ---------------- supervised step (PS, Alg.1 lines 4-5) ----------
-        def supervised_step(state: SemiSFLState, x, y, step_idx):
+        # Carry-style ``(state, batch) -> (state, loss)``: the SAME function
+        # is jitted for the eager per-step path and scanned (core/scan.py)
+        # for the compiled phase, so the two paths are numerically identical
+        # by construction.
+        def supervised_step(state: SemiSFLState, batch):
+            x, y = batch
             rng, k_aug = jax.random.split(state.rng)
             # labeled batches get the paper's weak augmentation a_w
             # (FixMatch/SemiFL convention); strong aug is reserved for the
             # student view of *unlabeled* data in semi_step below.
             xs = weak_augment(k_aug, x)
-            lr = self.lr_schedule(step_idx)
+            lr = self.lr_schedule(state.step)
 
             def loss_fn(params):
                 logits, z, _ = self._forward(params, xs)
@@ -145,24 +166,29 @@ class SemiSFLSystem:
 
             # enqueue teacher features of this labeled batch (ground truth
             # labels, always confident)
-            t_logits, tz, _ = self._forward(teacher, xs)
+            _, tz, _ = self._forward(teacher, xs)
             queue = enqueue(state.queue, jax.lax.stop_gradient(tz), y)
             new_state = SemiSFLState(params, teacher, opt, queue, rng,
-                                     state.round)
+                                     state.round, state.step + 1)
             return new_state, loss
 
         self.supervised_step = jax.jit(supervised_step)
+        self.supervised_phase = scan_phase(supervised_step)
 
         # --------------- cross-entity semi-supervised step ----------------
-        def semi_step(params_top, params_proj, teacher, client_bottoms,
-                      client_teacher_bottoms, queue: FeatureQueue, xu, rng,
-                      step_idx):
+        # Carry: (client_bottoms, client_teacher_bottoms, top, proj,
+        #         teacher, queue, rng, step) — everything the phase mutates
+        # plus the frozen teacher top/proj, so lax.scan threads it all
+        # on-device.
+        def semi_step(carry, xu):
             """xu: (N, B, H, W, C) unlabeled client batches."""
+            (client_bottoms, client_teacher_bottoms, params_top, params_proj,
+             teacher, queue, rng, step) = carry
             n = xu.shape[0]
             rng, kw, ks_ = jax.random.split(rng, 3)
             xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
             xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
-            lr = self.lr_schedule(step_idx)
+            lr = self.lr_schedule(step)
 
             # teacher path: client-side teacher bottoms + server teacher top
             def t_bottom(pb, x):
@@ -221,10 +247,12 @@ class SemiSFLSystem:
                                              new_bottoms, s.ema_decay)
             queue = enqueue(queue, tz, pseudo, conf_ok)
             mask_rate = 1.0 - conf_ok.astype(jnp.float32).mean()
-            return (new_bottoms, new_top, new_proj, new_teacher_bottoms,
-                    queue, rng, loss, h, mask_rate)
+            new_carry = (new_bottoms, new_teacher_bottoms, new_top, new_proj,
+                         teacher, queue, rng, step + 1)
+            return new_carry, (loss, h, mask_rate)
 
         self.semi_step = jax.jit(semi_step)
+        self.semi_phase = scan_phase(semi_step)
 
         # ---------------- evaluation (teacher model, Section V-B) ---------
         def eval_batch(params, x, y):
@@ -254,17 +282,32 @@ class SemiSFLSystem:
                   active: Optional[list[int]] = None,
                   rng_np: Optional[np.random.RandomState] = None
                   ) -> tuple[SemiSFLState, RoundMetrics]:
-        rng_np = rng_np or np.random.RandomState(int(state.round))
-        k_s = controller.k_s
-        step0 = int(state.round) * (self.s.k_s_init + self.s.k_u)
+        """Drive one aggregation round; returns the NEW state + metrics.
 
-        # (1) supervised phase
-        f_s_acc = []
-        for k in range(k_s):
-            x, y = labeled.next()
-            state, loss = self.supervised_step(state, jnp.asarray(x),
-                                               jnp.asarray(y), step0 + k)
-            f_s_acc.append(float(loss))
+        With the scanned executor (default) the incoming ``state``'s
+        buffers are DONATED to the phase programs: on accelerator
+        backends do not reuse ``state`` after this call (keep
+        ``jax.tree.map(jnp.copy, state)`` for rollback/best-checkpoint
+        logic, or run with ``scan_rounds=False``).  CPU ignores
+        donation."""
+        rng_np = rng_np or np.random.RandomState(int(state.round))
+        k_s, k_u = controller.k_s, self.s.k_u
+
+        # (1) supervised phase.  The LR schedule runs off the cumulative
+        # step counter carried in the state — NOT round * (k_s_init + k_u),
+        # which skips steps once Eq. (10) shrinks K_s.
+        if self.scan_rounds:
+            xs, ys = labeled.next_many(k_s)
+            state, losses_s = self.supervised_phase(
+                state, (jnp.asarray(xs), jnp.asarray(ys)))
+            f_s_acc = np.asarray(losses_s)        # one host sync per phase
+        else:
+            f_s_acc = []
+            for _ in range(k_s):
+                x, y = labeled.next()
+                state, loss = self.supervised_step(
+                    state, (jnp.asarray(x), jnp.asarray(y)))
+                f_s_acc.append(float(loss))
 
         # (2) broadcast
         if active is None:
@@ -275,29 +318,40 @@ class SemiSFLSystem:
         bottoms, t_bottoms = self.broadcast(state)
 
         # (3)-(4) cross-entity phase
-        top, proj = state.params["top"], state.params["proj"]
-        queue, rng = state.queue, state.rng
-        f_u_acc, mask_acc = [], []
-        for k in range(self.s.k_u):
-            xu, _ = stack_client_batches(client_loaders_, active)
-            (bottoms, top, proj, t_bottoms, queue, rng, loss, h_loss,
-             mask_rate) = self.semi_step(top, proj, state.teacher, bottoms,
-                                         t_bottoms, queue, jnp.asarray(xu),
-                                         rng, step0 + k_s + k)
-            f_u_acc.append(float(loss))
-            mask_acc.append(float(mask_rate))
+        carry = (bottoms, t_bottoms, state.params["top"],
+                 state.params["proj"], state.teacher, state.queue, state.rng,
+                 state.step)
+        if k_u == 0:
+            f_u_acc, mask_acc = np.zeros((0,)), np.zeros((0,))
+        elif self.scan_rounds:
+            xus, _ = stack_client_batches_many(client_loaders_, active, k_u)
+            carry, (losses_u, _h, masks) = self.semi_phase(
+                carry, jnp.asarray(xus))
+            f_u_acc, mask_acc = np.asarray(losses_u), np.asarray(masks)
+        else:
+            f_u_acc, mask_acc = [], []
+            for _ in range(k_u):
+                xu, _ = stack_client_batches(client_loaders_, active)
+                carry, (loss, _h, mask_rate) = self.semi_step(
+                    carry, jnp.asarray(xu))
+                f_u_acc.append(float(loss))
+                mask_acc.append(float(mask_rate))
+        (bottoms, t_bottoms, top, proj, teacher, queue, rng, step) = carry
 
-        # (5) aggregate
-        new_bottom = self.aggregate(bottoms)
-        params = {"bottom": new_bottom, "top": top, "proj": proj}
-        state = SemiSFLState(params, state.teacher, state.opt, queue, rng,
-                             state.round + 1)
+        # (5) aggregate — the global bottom AND the teacher bottom: the
+        # EMA-updated client teacher bottoms (Eq. (8)) are FedAvg'd into
+        # w~_c so `evaluate(use_teacher=True)` sees the cross-entity phase.
+        params = {"bottom": self.aggregate(bottoms), "top": top,
+                  "proj": proj}
+        teacher = dict(teacher, bottom=self.aggregate(t_bottoms))
+        state = SemiSFLState(params, teacher, state.opt, queue, rng,
+                             state.round + 1, step)
 
-        f_s = float(np.mean(f_s_acc)) if f_s_acc else 0.0
-        f_u = float(np.mean(f_u_acc)) if f_u_acc else 0.0
+        f_s = float(np.mean(f_s_acc)) if len(f_s_acc) else 0.0
+        f_u = float(np.mean(f_u_acc)) if len(f_u_acc) else 0.0
         controller.update(f_s, f_u)
         return state, RoundMetrics(f_s=f_s, f_u=f_u,
-                                   mask_rate=float(np.mean(mask_acc) if mask_acc else 0),
+                                   mask_rate=float(np.mean(mask_acc) if len(mask_acc) else 0),
                                    k_s=k_s)
 
     def evaluate(self, state: SemiSFLState, test_x: np.ndarray,

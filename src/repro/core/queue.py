@@ -38,12 +38,23 @@ def init_queue(queue_len: int, proj_dim: int) -> FeatureQueue:
 
 def enqueue(q: FeatureQueue, z: Array, labels: Array,
             conf: Array | None = None) -> FeatureQueue:
-    """Insert a batch (B <= Q) at the ring pointer (wrap-around)."""
+    """Insert a batch at the ring pointer (wrap-around).
+
+    Matches sequential one-at-a-time insertion for any batch size: when
+    ``B > Q`` (e.g. ``N*B`` cross-entity entries vs a small smoke queue)
+    only the trailing ``Q`` entries survive the wrap.  ``.at[slots].set``
+    has unspecified ordering on duplicate indices, so the leading ``B - Q``
+    entries are dropped *before* the scatter — every slot index is then
+    unique and the result is deterministic.
+    """
     b = z.shape[0]
     qlen = q.z.shape[0]
-    slots = (q.ptr + jnp.arange(b)) % qlen
     if conf is None:
         conf = jnp.ones((b,), bool)
+    offset = max(b - qlen, 0)        # static: shapes are trace-time constants
+    if offset:
+        z, labels, conf = z[offset:], labels[offset:], conf[offset:]
+    slots = (q.ptr + offset + jnp.arange(z.shape[0])) % qlen
     return FeatureQueue(
         z=q.z.at[slots].set(z.astype(q.z.dtype)),
         label=q.label.at[slots].set(labels.astype(jnp.int32)),

@@ -2,7 +2,9 @@ from repro.data.augment import (strong_augment, token_strong, token_weak,
                                 weak_augment)
 from repro.data.partition import (dirichlet_partition, partition_stats,
                                   uniform_partition)
-from repro.data.pipeline import Loader, client_loaders, stack_client_batches
+from repro.data.pipeline import (Loader, client_loaders,
+                                 stack_client_batches,
+                                 stack_client_batches_many)
 from repro.data.synthetic import (Dataset, make_image_dataset,
                                   make_lm_dataset, train_test_split)
 
@@ -10,5 +12,6 @@ __all__ = [
     "strong_augment", "token_strong", "token_weak", "weak_augment",
     "dirichlet_partition", "partition_stats", "uniform_partition",
     "Loader", "client_loaders", "stack_client_batches",
+    "stack_client_batches_many",
     "Dataset", "make_image_dataset", "make_lm_dataset", "train_test_split",
 ]

@@ -40,6 +40,14 @@ class Loader:
         self._cursor += b
         return self.ds.x[take], self.ds.y[take]
 
+    def next_many(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Prefetch ``k`` batches -> ``(K, B, ...)`` stacks for the
+        scan-compiled phase executor.  Draws exactly the same sample
+        sequence as ``k`` successive :meth:`next` calls, so the scanned
+        and eager round paths see identical data."""
+        xs, ys = zip(*(self.next() for _ in range(k)))
+        return np.stack(xs), np.stack(ys)
+
 
 def client_loaders(ds: Dataset, parts: list[np.ndarray], batch: int,
                    seed: int) -> list[Loader]:
@@ -49,4 +57,13 @@ def client_loaders(ds: Dataset, parts: list[np.ndarray], batch: int,
 def stack_client_batches(loaders: list[Loader], active: list[int]):
     """Sample one batch per active client -> stacked (N, B, ...) arrays."""
     xs, ys = zip(*(loaders[i].next() for i in active))
+    return np.stack(xs), np.stack(ys)
+
+
+def stack_client_batches_many(loaders: list[Loader], active: list[int],
+                              k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Prefetch ``k`` rounds of client batches -> ``(K, N, B, ...)`` stacks
+    for the scanned cross-entity phase.  Iteration-major draw order matches
+    ``k`` successive :func:`stack_client_batches` calls exactly."""
+    xs, ys = zip(*(stack_client_batches(loaders, active) for _ in range(k)))
     return np.stack(xs), np.stack(ys)

@@ -404,6 +404,22 @@ def make_train_step(plan: StepPlan, dist: DistContext,
     return step
 
 
+def make_scanned_train_phase(plan: StepPlan, dist: DistContext,
+                             lr: float = 0.02, *,
+                             donate_carry: bool = True) -> Callable:
+    """Scan-compiled K-iteration LM-task train phase.
+
+    Routes :func:`make_train_step` through the same ``core/scan.py``
+    builder the classification engine uses: ``phase(state, batches)``
+    where every leaf of ``batches`` gains a leading ``K`` axis
+    (``(K, N, B, ...)`` client stacks) and ``state`` is carried on-device
+    with buffer donation.  Per-iteration metrics come back stacked, so
+    the host syncs once per phase instead of once per step."""
+    from repro.core.scan import scan_phase
+    return scan_phase(make_train_step(plan, dist, lr),
+                      donate_carry=donate_carry)
+
+
 def make_prefill_step(plan: StepPlan, dist: DistContext) -> Callable:
     cfg = plan.cfg
     model = build_model(cfg)

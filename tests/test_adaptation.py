@@ -1,0 +1,107 @@
+"""Direct unit tests for FreqController (Section IV-B): the Eq. (9)
+indicator on deterministic loss trajectories, the Eq. (10) division by
+alpha, the K_min floor, and the state_dict round-trip."""
+from repro.configs.base import SemiSFLConfig
+from repro.core.adaptation import FreqController
+
+
+def _controller(*, k_s_init=64, k_u=10, obs=2, window=2, alpha=2.0,
+                beta=4.0, labeled=100, total=1000):
+    cfg = SemiSFLConfig(k_s_init=k_s_init, k_u=k_u, observation_period=obs,
+                        adaptation_window=window, alpha=alpha, beta=beta)
+    return FreqController(cfg, labeled, total)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (9): I_n = 1  iff  delta f_u^n > delta f_s^n
+# ---------------------------------------------------------------------------
+
+def test_indicator_fires_exactly_when_unsup_reduction_larger():
+    c = _controller(obs=1, window=100)   # period == round, no adaptation yet
+    # period means: f_s = [10, 9, 8, 8], f_u = [10, 7, 6, 6]
+    # reductions:   d_fs = [1, 1, 0],    d_fu = [3, 1, 0]
+    # indicator:    [3>1 -> 1, 1>1 -> 0, 0>0 -> 0]
+    for f_s, f_u in [(10, 10), (9, 7), (8, 6), (8, 6)]:
+        c.update(f_s, f_u)
+    assert c._indicators == [1, 0, 0]
+    assert c.r_h == 1 / 3
+
+
+def test_observation_period_means_feed_the_indicator():
+    c = _controller(obs=2, window=100)
+    # rounds (f_s, f_u): period 1 mean = (10, 10); period 2 mean = (10, 4)
+    for f_s, f_u in [(12, 8), (8, 12), (12, 2), (8, 6)]:
+        c.update(f_s, f_u)
+    # d_fs = 0, d_fu = 6 -> unsupervised declines faster -> I = 1
+    assert c._indicators == [1]
+
+
+# ---------------------------------------------------------------------------
+# Eq. (10): K_s <- max(floor(K_s / alpha), K_min) when R_h >= 0.5
+# ---------------------------------------------------------------------------
+
+def test_ks_divides_by_alpha_once_window_fills():
+    c = _controller(obs=1, window=2, alpha=2.0)
+    f_u = 16.0
+    ks_seen = []
+    # f_u falls geometrically (accelerating absolute reductions vs flat
+    # f_s) -> every indicator is 1 -> first adaptation at the 2nd indicator
+    for _ in range(6):
+        ks_seen.append(c.update(5.0, f_u))
+        f_u *= 0.5
+    assert 32 in ks_seen            # exactly 64 / alpha
+    # indicators cleared on adaptation: the window must refill before the
+    # next halving, so 64 -> 32 happens once, not per round
+    assert ks_seen.count(32) >= 2
+
+
+def test_ks_floor_is_kmin_exactly():
+    c = _controller(obs=1, window=1, alpha=100.0)
+    # single-indicator window + huge alpha: one adaptation drops straight
+    # through to the floor
+    c.update(5.0, 10.0)
+    c.update(5.0, 1.0)    # d_fu = 9 > d_fs = 0 -> adapt
+    c.update(5.0, 0.5)
+    assert c.k_s == c.k_min == max(1, int(4.0 * 100 / 1000 * 10))
+
+
+def test_no_adaptation_when_supervised_declines_faster():
+    c = _controller(obs=1, window=2)
+    f_s = 16.0
+    for _ in range(10):
+        c.update(f_s, 5.0)
+        f_s *= 0.5
+    assert c.k_s == 64
+
+
+# ---------------------------------------------------------------------------
+# state_dict round-trip
+# ---------------------------------------------------------------------------
+
+def test_state_dict_roundtrip_resumes_identically():
+    a = _controller(obs=2, window=2)
+    traj = [(10.0, 16.0), (9.0, 12.0), (8.5, 7.0), (8.0, 5.0), (7.9, 3.0)]
+    for f_s, f_u in traj[:3]:
+        a.update(f_s, f_u)
+    snap = a.state_dict()
+
+    b = _controller(obs=2, window=2)
+    b.load_state_dict(snap)
+    assert b.k_s == a.k_s
+
+    # the restored controller must continue the trajectory bit-for-bit,
+    # including the mid-period accumulators
+    for f_s, f_u in traj[3:]:
+        ka = a.update(f_s, f_u)
+        kb = b.update(f_s, f_u)
+        assert ka == kb
+    assert a.state_dict() == b.state_dict()
+
+
+def test_state_dict_tolerates_legacy_snapshots():
+    # pre-PR-2 snapshots had no mid-period accumulators
+    legacy = {"k_s": 7, "indicators": [1, 0], "period_fs": [5.0],
+              "period_fu": [4.0]}
+    c = _controller()
+    c.load_state_dict(legacy)
+    assert c.k_s == 7 and c._fs_acc == [] and c._indicators == [1, 0]

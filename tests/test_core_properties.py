@@ -85,6 +85,38 @@ def test_queue_confidence_flags(batch):
     assert int((q.conf & q.valid).sum()) == int(conf.sum())
 
 
+@given(st.integers(2, 24), st.integers(1, 60), st.integers(1, 4))
+def test_queue_batch_enqueue_matches_sequential_model(qlen, batch, n_steps):
+    """Batched enqueue == one-at-a-time ring insertion for ANY batch size,
+    including b > qlen (the N*B cross-entity batch vs a small smoke queue)
+    where `.at[slots].set` on wrapped duplicate slots used to be
+    unspecified-order: only the trailing qlen entries may survive."""
+    d = 2
+    q = init_queue(qlen, d)
+    ref_z = np.zeros((qlen, d), np.float32)
+    ref_label = np.zeros((qlen,), np.int32)
+    ref_conf = np.zeros((qlen,), bool)
+    ref_valid = np.zeros((qlen,), bool)
+    ptr, counter = 0, 0
+    for _ in range(n_steps):
+        vals = np.arange(counter, counter + batch, dtype=np.int32)
+        counter += batch
+        z = np.repeat(vals[:, None], d, 1).astype(np.float32)
+        conf = vals % 3 == 0
+        q = enqueue(q, jnp.asarray(z), jnp.asarray(vals), jnp.asarray(conf))
+        for i in range(batch):          # the sequential reference model
+            ref_z[ptr] = z[i]
+            ref_label[ptr] = vals[i]
+            ref_conf[ptr] = conf[i]
+            ref_valid[ptr] = True
+            ptr = (ptr + 1) % qlen
+    np.testing.assert_array_equal(np.asarray(q.z), ref_z)
+    np.testing.assert_array_equal(np.asarray(q.label), ref_label)
+    np.testing.assert_array_equal(np.asarray(q.conf), ref_conf)
+    np.testing.assert_array_equal(np.asarray(q.valid), ref_valid)
+    assert int(q.ptr) == ptr
+
+
 # ---------------------------------------------------------------------------
 # K_s adaptation (Eq. 9-10)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,170 @@
+"""Parity of the scan-compiled round executor against the eager per-step
+path: both drive the SAME step functions (`core/engine.py` builds one
+carry-style step and either jits it per-step or `lax.scan`s it via
+`core/scan.py`), so params/teacher/queue/metrics must match numerically
+over multiple rounds.  Also covers the LM-task scanned train phase
+(`launch/steps.py::make_scanned_train_phase`) and the `scan_phase`
+builder itself."""
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.engine import SemiSFLSystem, make_controller
+from repro.core.scan import scan_phase
+from repro.data import (Loader, client_loaders, make_image_dataset,
+                        train_test_split, uniform_partition)
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def _tiny_cfg():
+    cfg = smoke_config("paper-cnn")
+    # tau=0: teacher pseudo-labels pass the gate from round 1, so the
+    # consistency + clustering terms (and their queue writes) are live and
+    # the parity check covers the full cross-entity step, not a no-op.
+    return replace(cfg, image_size=8, cnn_channels=(4, 8),
+                   semisfl=replace(cfg.semisfl, k_s_init=3, k_u=2,
+                                   queue_len=32, confidence_threshold=0.0))
+
+
+def _rig(cfg, seed=0):
+    ds = make_image_dataset(seed, num_classes=10, n=260,
+                            image_size=cfg.image_size)
+    train, test = train_test_split(ds, 60, seed=seed)
+    lab = Loader(train, np.arange(40), 8, seed)
+    un = np.arange(40, len(train.y))
+    cls = client_loaders(train, [un[p] for p in
+                                 uniform_partition(seed, len(un), 4)], 8,
+                         seed + 1)
+    return train, test, lab, cls
+
+
+def _run(cfg, scan_rounds, rounds=2):
+    train, test, lab, cls = _rig(cfg)
+    sys_ = SemiSFLSystem(cfg, n_clients_per_round=3, scan_rounds=scan_rounds)
+    state = sys_.init_state(0)
+    ctrl = make_controller(cfg, 40, len(train.y))
+    metrics = []
+    for _ in range(rounds):
+        state, m = sys_.run_round(state, lab, cls, ctrl)
+        metrics.append((m.f_s, m.f_u, m.mask_rate))
+    return state, metrics
+
+
+def _max_abs_diff(a, b):
+    diffs = jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(
+            jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32)))),
+        a, b)
+    return max(jax.tree.leaves(diffs))
+
+
+def test_scanned_round_matches_eager_two_rounds():
+    cfg = _tiny_cfg()
+    s_eager, m_eager = _run(cfg, scan_rounds=False)
+    s_scan, m_scan = _run(cfg, scan_rounds=True)
+
+    assert _max_abs_diff(s_eager.params, s_scan.params) < 1e-5
+    assert _max_abs_diff(s_eager.teacher, s_scan.teacher) < 1e-5
+    assert _max_abs_diff(s_eager.queue.z, s_scan.queue.z) < 1e-5
+    np.testing.assert_array_equal(np.asarray(s_eager.queue.label),
+                                  np.asarray(s_scan.queue.label))
+    np.testing.assert_array_equal(np.asarray(s_eager.queue.valid),
+                                  np.asarray(s_scan.queue.valid))
+    assert int(s_eager.queue.ptr) == int(s_scan.queue.ptr)
+    # cumulative LR-schedule step counter advances identically
+    assert int(s_eager.step) == int(s_scan.step) == 2 * (3 + 2)
+    for (a, b) in zip(m_eager, m_scan):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_scanned_round_same_when_ks_adapts():
+    """The scanned executor retraces (one compile per distinct K_s) but
+    stays numerically equal to eager when Eq. (10) shrinks K_s."""
+    cfg = _tiny_cfg()
+    results = {}
+    for scan in (False, True):
+        train, _, lab, cls = _rig(cfg)
+        sys_ = SemiSFLSystem(cfg, n_clients_per_round=3, scan_rounds=scan)
+        state = sys_.init_state(0)
+        ctrl = make_controller(cfg, 40, len(train.y))
+        for r in range(2):
+            ctrl.k_s = 3 - r        # forced shrink: 3 then 2
+            state, _ = sys_.run_round(state, lab, cls, ctrl)
+        results[scan] = state
+    assert _max_abs_diff(results[False].params, results[True].params) < 1e-5
+    # step counter is cumulative over the ACTUAL k_s values, no drift
+    assert int(results[True].step) == (3 + 2) + (2 + 2)
+
+
+def test_scan_phase_builder_matches_python_loop():
+    """scan_phase == functools.reduce over the leading axis."""
+    def step(carry, x):
+        carry = carry * 0.5 + x.sum()
+        return carry, carry
+
+    phase = scan_phase(step, donate_carry=False)
+    xs = jnp.arange(12.0).reshape(4, 3)
+    carry, outs = phase(jnp.float32(1.0), xs)
+    c = jnp.float32(1.0)
+    expect = []
+    for k in range(4):
+        c, o = step(c, xs[k])
+        expect.append(float(o))
+    np.testing.assert_allclose(np.asarray(outs), expect, rtol=1e-6)
+    np.testing.assert_allclose(float(carry), expect[-1], rtol=1e-6)
+
+
+def test_lm_scanned_train_phase_matches_sequential_steps():
+    """The LM-task train step routed through the same scan builder
+    (launch/steps.py) matches K sequential eager step() calls."""
+    from repro.configs.base import InputShape
+    from repro.launch.steps import (input_specs, make_plan,
+                                    make_scanned_train_phase,
+                                    make_train_step)
+    from repro.models import DistContext
+
+    cfg = replace(smoke_config("qwen3-14b"), dtype="float32")
+    cfg = replace(cfg, semisfl=replace(cfg.semisfl, queue_len=32,
+                                       confidence_threshold=0.0))
+    shape = InputShape("train_tiny", 8, 4, "train")   # seq_len 8, batch 4
+    plan = make_plan(cfg, shape, n_clients=2)
+    specs = input_specs(plan)
+
+    rng = np.random.RandomState(0)
+
+    def realize(x):
+        if x.dtype == jnp.int32:
+            return jnp.asarray(rng.randint(0, max(cfg.vocab_size, 2),
+                                           x.shape), jnp.int32)
+        if x.dtype == jnp.bool_:
+            return jnp.zeros(x.shape, bool)
+        return jnp.asarray(rng.randn(*x.shape), x.dtype)
+
+    state = jax.tree.map(realize, specs["state"])
+    K = 2
+    batches = [jax.tree.map(realize, specs["batch"]) for _ in range(K)]
+    stacked = jax.tree.map(lambda *bs: jnp.stack(bs), *batches)
+
+    step = jax.jit(make_train_step(plan, DistContext()))
+    s_eager = state
+    eager_losses = []
+    for k in range(K):
+        s_eager, m = step(s_eager, batches[k])
+        eager_losses.append(float(m["loss"]))
+
+    phase = make_scanned_train_phase(plan, DistContext(),
+                                     donate_carry=False)
+    s_scan, ms = phase(state, stacked)
+
+    np.testing.assert_allclose(np.asarray(ms["loss"]), eager_losses,
+                               rtol=1e-4, atol=1e-5)
+    for key in ("client_bottoms", "top", "proj", "teacher_bottoms"):
+        diff = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))),
+            s_eager[key], s_scan[key])
+        assert max(jax.tree.leaves(diff)) < 1e-4, key

@@ -54,3 +54,43 @@ def test_one_round_touches_every_subsystem():
     # evaluation runs on the teacher (paper metric)
     acc = sys_.evaluate(state, test.x, test.y)
     assert 0.0 <= acc <= 1.0
+    # cumulative LR-schedule step counter advanced by k_s + k_u
+    assert int(state.step) == 3 + 2
+
+
+def test_teacher_bottom_learns_from_cross_entity_phase():
+    """Regression (Eq. (8) + step (5)): the EMA-updated client teacher
+    bottoms must be FedAvg'd back into state.teacher["bottom"] — a round
+    with K_u > 0 must leave a different teacher bottom than the identical
+    round with K_u = 0 (the supervised phases are seed-identical, so any
+    difference comes from the cross-entity phase)."""
+    import jax
+    import jax.numpy as jnp
+
+    def run(k_u):
+        cfg = smoke_config("paper-cnn")
+        # tau=0 so cross-entity gradients flow from round 1
+        cfg = replace(cfg, image_size=8, cnn_channels=(4, 8),
+                      semisfl=replace(cfg.semisfl, k_s_init=2, k_u=k_u,
+                                      queue_len=64,
+                                      confidence_threshold=0.0))
+        ds = make_image_dataset(0, num_classes=10, n=200,
+                                image_size=cfg.image_size)
+        train, _ = train_test_split(ds, 40)
+        lab = Loader(train, np.arange(40), 8, 0)
+        un = np.arange(40, len(train.y))
+        cls = client_loaders(train, [un[p] for p in
+                                     uniform_partition(0, len(un), 4)], 8, 1)
+        sys_ = SemiSFLSystem(cfg, n_clients_per_round=3)
+        state = sys_.init_state(0)
+        ctrl = make_controller(cfg, 40, len(train.y))
+        state, _ = sys_.run_round(state, lab, cls, ctrl)
+        return state
+
+    with_semi = run(k_u=2)
+    without = run(k_u=0)
+    diff = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                        with_semi.teacher["bottom"],
+                        without.teacher["bottom"])
+    assert max(jax.tree.leaves(diff)) > 0, (
+        "teacher bottom ignored the cross-entity phase (Eq. (8) dropped)")
