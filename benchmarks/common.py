@@ -82,13 +82,14 @@ def make_rig(*, arch="paper-cnn", n_labeled=100, n_total=2400, n_test=300,
     return cfg, train, test, lab, cls
 
 
-def build_system(method: str, cfg, n_active: int, scan_rounds=None):
+def build_system(method: str, cfg, n_active: int, scan_rounds=None,
+                 mesh=None):
     if method == "semisfl":
         return SemiSFLSystem(cfg, n_clients_per_round=n_active,
-                             scan_rounds=scan_rounds)
+                             scan_rounds=scan_rounds, mesh=mesh)
     if method == "fedswitch-sl":
         return make_fedswitch_sl(cfg, n_clients_per_round=n_active,
-                                 scan_rounds=scan_rounds)
+                                 scan_rounds=scan_rounds, mesh=mesh)
     return BASELINES[method](cfg, n_clients_per_round=n_active)
 
 
@@ -137,6 +138,10 @@ def run_method(method: str, *, rounds: int = 20, n_active: int = 5,
             k_u=cfg.semisfl.k_u, n_active=n_active, batch=16, cost=cost))
         if r % eval_every == 0 or r == rounds - 1:
             acc = sys_.evaluate(state, test.x, test.y)
+            if not isinstance(m, dict):
+                # keep the round's RoundMetrics truthful (acc_history is
+                # what BenchResult consumers read)
+                m.test_acc = acc
             res.acc_history.append((r, acc))
             if log:
                 log(f"  [{method}] r={r} acc={acc:.3f} k_s={k_s_now}")

@@ -58,29 +58,51 @@ def _smoke_rig():
                     arch_overrides={"image_size": 8, "cnn_channels": (4, 8)})
 
 
+def _smoke_mesh(n_active: int):
+    """Host mesh for the client-sharded smoke entry (1 device on CI — the
+    entry then measures pure shard_map overhead vs the vmapped executor,
+    which is exactly the regression CI should see first)."""
+    from repro.launch.mesh import make_client_mesh
+    return make_client_mesh(n_active)
+
+
 def run_smoke(out_dir: str) -> dict:
     """Tiny config end-to-end: exercises the data pipeline, the engine's
-    vmapped multi-client round (scanned AND eager executors), the
+    multi-client round (scanned, eager AND client-sharded executors), the
     dispatched clustering kernel, and the adaptation controller, in
-    seconds.  Writes BENCH_smoke.json with ``us_per_round_scanned`` vs
-    ``us_per_round_eager`` so CI can gate executor regressions."""
+    seconds.  Writes BENCH_smoke.json with ``us_per_round_scanned`` /
+    ``us_per_round_eager`` / ``us_per_round_sharded`` so CI can gate
+    executor regressions."""
     from repro.kernels import dispatch
 
     from benchmarks.common import build_system, run_method
 
     rounds = 3
+    n_active = 2
+    mesh = _smoke_mesh(n_active)
     log = lambda *a: print("#", *a)
     timings, res = {}, None
-    for mode, scan in (("eager", False), ("scanned", True)):
+    for mode, scan, m in (("eager", False, None), ("scanned", True, None),
+                          ("sharded", True, mesh)):
         rig = _smoke_rig()
-        sys_ = build_system("semisfl", rig[0], 2, scan_rounds=scan)
-        # warm-up round on the same system: jit tracing/compilation happens
-        # here, so us_per_round below tracks engine time, not the compiler
-        run_method("semisfl", rounds=1, n_active=2, system=sys_, rig=rig,
-                   log=log)
+        sys_ = build_system("semisfl", rig[0], n_active, scan_rounds=scan,
+                            mesh=m)
+        if m is not None:
+            # a REPRO_* env override downgrading the executor would make
+            # us record vmapped timings as "sharded" — refuse instead
+            assert sys_._use_sharded, (
+                "sharded smoke entry fell back to the vmapped executor "
+                "(REPRO_SCAN_ROUNDS / REPRO_SHARD_CLIENTS override?)")
+        # warm-up rounds on the same system: jit tracing/compilation happens
+        # here, so us_per_round below tracks engine time, not the compiler.
+        # 3 rounds: with the sharded executor the round-N inputs pass
+        # through up to three commitment states (host arrays -> mixed ->
+        # fully mesh-committed), each its own compile-cache entry
+        run_method("semisfl", rounds=3, n_active=n_active, system=sys_,
+                   rig=rig, log=log)
         t0 = time.time()
-        res = run_method("semisfl", rounds=rounds, n_active=2, eval_every=2,
-                         system=sys_, rig=rig, log=log)
+        res = run_method("semisfl", rounds=rounds, n_active=n_active,
+                         eval_every=2, system=sys_, rig=rig, log=log)
         timings[mode] = (time.time() - t0) * 1e6 / rounds
     rec = {
         "benchmark": "smoke",
@@ -91,7 +113,12 @@ def run_smoke(out_dir: str) -> dict:
         "us_per_round": round(timings["scanned"]),
         "us_per_round_scanned": round(timings["scanned"]),
         "us_per_round_eager": round(timings["eager"]),
+        "us_per_round_sharded": round(timings["sharded"]),
         "scan_speedup": round(timings["eager"] / timings["scanned"], 2),
+        # sharded-vs-vmapped on the scanned phase (>1: sharding pays off;
+        # on a 1-device mesh this is the shard_map overhead ratio)
+        "shard_speedup": round(timings["scanned"] / timings["sharded"], 2),
+        "shard_devices": mesh.shape["data"],
         "kernel_backend": dispatch.resolve(),
         "jax_version": __import__("jax").__version__,
     }

@@ -35,8 +35,8 @@ from typing import Any, Callable, Optional
 import jax
 
 __all__ = [
-    "AxisType", "HAS_PALLAS", "HAS_PALLAS_TPU", "cost_analysis",
-    "default_backend", "is_tpu", "jax_version", "make_mesh",
+    "AxisType", "HAS_PALLAS", "HAS_PALLAS_TPU", "axis_index",
+    "cost_analysis", "default_backend", "is_tpu", "jax_version", "make_mesh",
     "pallas_compiler_params", "pl", "pltpu", "resolve_shard_map",
     "shard_map", "supports_axis_types", "use_mesh",
 ]
@@ -147,6 +147,27 @@ def use_mesh(mesh, _jax: Any = None):
         return
     with cm:
         yield mesh
+
+
+def axis_index(axis_names) -> Any:
+    """Flattened index of this shard over one or more mapped mesh axes.
+
+    Current ``jax.lax.axis_index`` accepts a tuple of names and returns
+    the row-major flattened index; 0.4.x only takes a single name.  This
+    builds the flattened index from single-axis calls (axis sizes via the
+    constant-foldable ``psum(1, name)``), so row-major order over e.g.
+    ``("pod", "data")`` matches the block order of a leading array axis
+    sharded with ``PartitionSpec(("pod", "data"), ...)`` on every
+    supported JAX."""
+    if isinstance(axis_names, str):
+        return jax.lax.axis_index(axis_names)
+    idx = None
+    for name in axis_names:
+        i = jax.lax.axis_index(name)
+        idx = i if idx is None else idx * jax.lax.psum(1, name) + i
+    if idx is None:
+        raise ValueError("axis_index needs at least one axis name")
+    return idx
 
 
 def cost_analysis(compiled) -> dict:

@@ -159,6 +159,10 @@ class ArchConfig:
     # CNN family (the paper's own models)
     cnn_channels: Tuple[int, ...] = ()
     cnn_fc: Tuple[int, ...] = ()
+    # dropout on the FC-stack activations (AlexNet/VGG convention); active
+    # only in train-mode forwards that supply per-sample dropout keys —
+    # eval-mode forwards are deterministic by construction.
+    cnn_dropout: float = 0.0
     image_size: int = 32
     num_classes: int = 0                # classification task head (paper task)
 

@@ -11,7 +11,7 @@ from dataclasses import replace
 from repro.configs.base import ArchConfig, SemiSFLConfig, register
 
 
-def _cnn(name, channels, fc, image_size, split, num_classes=10):
+def _cnn(name, channels, fc, image_size, split, num_classes=10, dropout=0.0):
     return register(ArchConfig(
         name=name,
         arch_type="cnn",
@@ -24,6 +24,7 @@ def _cnn(name, channels, fc, image_size, split, num_classes=10):
         vocab_size=0,
         cnn_channels=channels,
         cnn_fc=fc,
+        cnn_dropout=dropout,
         image_size=image_size,
         num_classes=num_classes,
         modality="image",
@@ -36,17 +37,18 @@ def _cnn(name, channels, fc, image_size, split, num_classes=10):
 # (i) customized CNN on SVHN: two 5x5 convs, FC 512, softmax 10
 PAPER_CNN = _cnn("paper-cnn", channels=(32, 64), fc=(512,), image_size=32, split=2)
 
-# (ii) AlexNet on CIFAR-10 (127 MB)
+# (ii) AlexNet on CIFAR-10 (127 MB); 0.5 dropout on the FC-4096 stack
 PAPER_ALEXNET = _cnn("paper-alexnet", channels=(64, 192, 384, 256, 256),
-                     fc=(4096, 4096), image_size=32, split=5)
+                     fc=(4096, 4096), image_size=32, split=5, dropout=0.5)
 
-# (iii) VGG13 on STL-10 (508 MB)
+# (iii) VGG13 on STL-10 (508 MB); 0.5 dropout on the FC-4096 stack
 PAPER_VGG13 = _cnn("paper-vgg13",
                    channels=(64, 64, 128, 128, 256, 256, 512, 512, 512, 512),
-                   fc=(4096, 4096), image_size=96, split=10)
+                   fc=(4096, 4096), image_size=96, split=10, dropout=0.5)
 
-# (iv) VGG16 on IMAGE-100 (528 MB, 0.13B params)
+# (iv) VGG16 on IMAGE-100 (528 MB, 0.13B params); 0.5 FC dropout
 PAPER_VGG16 = _cnn("paper-vgg16",
                    channels=(64, 64, 128, 128, 256, 256, 256, 512, 512, 512,
                              512, 512, 512),
-                   fc=(4096, 4096), image_size=144, split=13, num_classes=100)
+                   fc=(4096, 4096), image_size=144, split=13, num_classes=100,
+                   dropout=0.5)

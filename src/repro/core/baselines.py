@@ -30,7 +30,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import losses
 from repro.core.ema import ema_update
-from repro.core.engine import SemiSFLSystem
+from repro.core.engine import SemiSFLSystem, selection_rng
 from repro.data.augment import strong_augment, weak_augment
 from repro.data.pipeline import Loader, stack_client_batches
 from repro.models import build_model
@@ -47,10 +47,37 @@ class FLState(NamedTuple):
     round: Array
 
 
-def _full_forward(model, params, x):
-    feats, _, extras = model.bottom_apply(params["bottom"], {"images": x})
-    out, _ = model.top_apply(params["top"], feats, extras=extras)
+def _full_forward(model, params, x, mode="train", rng=None):
+    """Full-model forward.  ``rng`` keys per-sample dropout masks in
+    train mode (same convention as the SemiSFL engine's ``_forward``), so
+    AlexNet/VGG baselines train under the same FC dropout as the split
+    system; pseudo-labeling and evaluation run ``mode="eval"`` and stay
+    deterministic."""
+    feats, _, extras = model.bottom_apply(params["bottom"], {"images": x},
+                                          mode=mode)
+    if mode == "train" and rng is not None:
+        extras = dict(extras,
+                      dropout_keys=jax.random.split(rng, x.shape[0]))
+    out, _ = model.top_apply(params["top"], feats, extras=extras, mode=mode)
     return out["logits"]
+
+
+def _client_forward(model, stacked_params, xs, keys):
+    """Client-vmapped TRAIN forward; ``keys`` (one per client, or None)
+    key the per-client dropout masks."""
+    if keys is None:
+        return jax.vmap(lambda p, x: _full_forward(model, p, x))(
+            stacked_params, xs)
+    return jax.vmap(lambda p, x, k: _full_forward(model, p, x, rng=k))(
+        stacked_params, xs, keys)
+
+
+def _client_dropout_keys(kd, n, idx=0):
+    """Per-client dropout keys for the ``idx``-th forward of a local step
+    (None when the arch has no dropout)."""
+    if kd is None:
+        return None
+    return jax.random.split(jax.random.fold_in(kd, idx), n)
 
 
 class FLBase:
@@ -69,12 +96,21 @@ class FLBase:
         self.local_steps = local_steps
         self.opt = sgd(momentum=momentum)
         self.lr_schedule = lr_schedule or (lambda step: jnp.float32(lr))
+        self._select_rng: Optional[np.random.RandomState] = None
+        # same gating as the SemiSFL engine: only dropout-bearing archs
+        # consume dropout key material (dropout-free configs keep their
+        # previous PRNG stream bit-for-bit)
+        self._has_dropout = (cfg.arch_type == "cnn"
+                             and cfg.cnn_dropout > 0.0)
         self._build()
 
     def init_state(self, seed: int = 0) -> FLState:
         rng = jax.random.PRNGKey(seed)
         k1, k2 = jax.random.split(rng)
         params = self.model.init(k1)
+        # host-side selection RNG, created once per run (same fix as the
+        # SemiSFL engine: never seed from state.round)
+        self._select_rng = np.random.RandomState(seed)
         return FLState(params=params,
                        teacher=jax.tree.map(jnp.copy, params),
                        opt=self.opt.init(params), rng=k2,
@@ -83,14 +119,20 @@ class FLBase:
     # -- steps ---------------------------------------------------------
     def _build(self):
         model, s = self.model, self.s
+        has_dropout = self._has_dropout
 
         def supervised_step(state: FLState, x, y, step_idx):
-            rng, k = jax.random.split(state.rng)
+            if has_dropout:
+                rng, k, k_drop = jax.random.split(state.rng, 3)
+            else:
+                rng, k = jax.random.split(state.rng)
+                k_drop = None
             xs = strong_augment(k, x)
             lr = self.lr_schedule(step_idx)
 
             def lf(p):
-                return losses.cross_entropy(_full_forward(model, p, xs), y)
+                return losses.cross_entropy(
+                    _full_forward(model, p, xs, rng=k_drop), y)
 
             loss, grads = jax.value_and_grad(lf)(state.params)
             upd, opt = self.opt.update(grads, state.opt, state.params, lr)
@@ -101,7 +143,7 @@ class FLBase:
         self.supervised_step = jax.jit(supervised_step)
 
         def eval_batch(params, x, y):
-            logits = _full_forward(model, params, x)
+            logits = _full_forward(model, params, x, mode="eval")
             return (logits.argmax(-1) == y).astype(jnp.float32).sum()
 
         self.eval_batch = jax.jit(eval_batch)
@@ -115,7 +157,7 @@ class FLBase:
     def run_round(self, state: FLState, labeled: Loader,
                   client_loaders_: list[Loader], controller,
                   rng_np: Optional[np.random.RandomState] = None):
-        rng_np = rng_np or np.random.RandomState(int(state.round))
+        rng_np = selection_rng(self, rng_np)
         k_s = controller.k_s if controller is not None else self.s.k_s_init
         step0 = int(state.round) * (self.s.k_s_init + self.s.k_u)
         f_s = []
@@ -197,16 +239,23 @@ class SemiFL(FLBase):
     def _build_local(self):
         model, s = self.model, self.s
         lr_schedule = self.lr_schedule
+        has_dropout = self._has_dropout
 
         def local_step(client_params, teacher, global_params, xu, rng, step):
             n = xu.shape[0]
-            rng, kw, ks_, km, kl = jax.random.split(rng, 5)
+            if has_dropout:
+                rng, kw, ks_, km, kl, kd = jax.random.split(rng, 6)
+            else:
+                rng, kw, ks_, km, kl = jax.random.split(rng, 5)
+                kd = None
             xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
             xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
             lr = lr_schedule(step)
             # pseudo-label with the up-to-date global model (Diao et al.)
+            # — an inference pass: eval mode, deterministic
             t_logits = jax.vmap(
-                lambda x: _full_forward(model, global_params, x))(xw)
+                lambda x: _full_forward(model, global_params, x,
+                                        mode="eval"))(xw)
             pseudo, ok, _ = losses.pseudo_labels(t_logits,
                                                  s.confidence_threshold)
             # mixup within each client batch
@@ -215,11 +264,11 @@ class SemiFL(FLBase):
             x_mix = lam * xs + (1 - lam) * xs[:, perm]
 
             def lf(cp):
-                logits = jax.vmap(
-                    lambda p, x: _full_forward(model, p, x))(cp, xs)
+                logits = _client_forward(
+                    model, cp, xs, _client_dropout_keys(kd, n, 0))
                 ce = losses.cross_entropy(logits, pseudo, mask=ok)
-                logits_m = jax.vmap(
-                    lambda p, x: _full_forward(model, p, x))(cp, x_mix)
+                logits_m = _client_forward(
+                    model, cp, x_mix, _client_dropout_keys(kd, n, 1))
                 mix = (lam * losses.cross_entropy(logits_m, pseudo, mask=ok)
                        + (1 - lam) * losses.cross_entropy(
                            logits_m, pseudo[:, perm], mask=ok[:, perm]))
@@ -242,17 +291,25 @@ class FedSwitch(FLBase):
     def _build_local(self):
         model, s = self.model, self.s
         lr_schedule = self.lr_schedule
+        has_dropout = self._has_dropout
 
         def local_step(client_params, teacher, global_params, xu, rng, step):
             n = xu.shape[0]
-            rng, kw, ks_ = jax.random.split(rng, 3)
+            if has_dropout:
+                rng, kw, ks_, kd = jax.random.split(rng, 4)
+            else:
+                rng, kw, ks_ = jax.random.split(rng, 3)
+                kd = None
             xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
             xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
             lr = lr_schedule(step)
+            # both labeler candidates are inference passes: eval mode
             t_logits = jax.vmap(
-                lambda x: _full_forward(model, teacher, x))(xw)
+                lambda x: _full_forward(model, teacher, x,
+                                        mode="eval"))(xw)
             s_logits = jax.vmap(
-                lambda p, x: _full_forward(model, p, x))(client_params, xw)
+                lambda p, x: _full_forward(model, p, x, mode="eval"))(
+                client_params, xw)
             # switch: per-client, use whichever labeler is more confident
             t_conf = jax.nn.softmax(t_logits, -1).max(-1).mean(-1)  # (N,)
             s_conf = jax.nn.softmax(s_logits, -1).max(-1).mean(-1)
@@ -264,8 +321,8 @@ class FedSwitch(FLBase):
             ok = jax.lax.stop_gradient(ok)
 
             def lf(cp):
-                logits = jax.vmap(
-                    lambda p, x: _full_forward(model, p, x))(cp, xs)
+                logits = _client_forward(
+                    model, cp, xs, _client_dropout_keys(kd, n))
                 return losses.cross_entropy(logits, pseudo, mask=ok)
 
             loss, grads = jax.value_and_grad(lf)(client_params)
@@ -306,16 +363,22 @@ class FedMatch(FLBase):
 
     def _build(self):
         model, s = self.model, self.s
+        has_dropout = self._has_dropout
 
         def supervised_step(state: FLState, x, y, step_idx):
-            rng, k = jax.random.split(state.rng)
+            if has_dropout:
+                rng, k, k_drop = jax.random.split(state.rng, 3)
+            else:
+                rng, k = jax.random.split(state.rng)
+                k_drop = None
             xs = strong_augment(k, x)
             lr = self.lr_schedule(step_idx)
             psi = state.params["psi"]
 
             def lf(sigma):
                 full = jax.tree.map(lambda a, b: a + b, sigma, psi)
-                return losses.cross_entropy(_full_forward(model, full, xs), y)
+                return losses.cross_entropy(
+                    _full_forward(model, full, xs, rng=k_drop), y)
 
             loss, grads = jax.value_and_grad(lf)(state.params["sigma"])
             upd, opt = self.opt.update(grads, state.opt,
@@ -328,7 +391,8 @@ class FedMatch(FLBase):
         self.supervised_step = jax.jit(supervised_step)
 
         def eval_batch(params, x, y):
-            logits = _full_forward(model, self._combine(params), x)
+            logits = _full_forward(model, self._combine(params), x,
+                                   mode="eval")
             return (logits.argmax(-1) == y).astype(jnp.float32).sum()
 
         self.eval_batch = jax.jit(eval_batch)
@@ -337,10 +401,15 @@ class FedMatch(FLBase):
     def _build_local(self):
         model, s = self.model, self.s
         lr_schedule = self.lr_schedule
+        has_dropout = self._has_dropout
 
         def local_step(client_params, teacher, global_params, xu, rng, step):
             n = xu.shape[0]
-            rng, kw, ks_ = jax.random.split(rng, 3)
+            if has_dropout:
+                rng, kw, ks_, kd = jax.random.split(rng, 4)
+            else:
+                rng, kw, ks_ = jax.random.split(rng, 3)
+                kd = None
             xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
             xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
             lr = lr_schedule(step)
@@ -350,10 +419,12 @@ class FedMatch(FLBase):
                 return jax.tree.map(lambda a, b: a + b, sigma_i, psi_i)
 
             # helper predictions: mean logits of the other clients' models
-            def fwd(psi_i, sigma_i, x):
-                return _full_forward(model, full_of(psi_i, sigma_i), x)
+            # — inference passes, eval mode
+            def label_fwd(psi_i, sigma_i, x):
+                return _full_forward(model, full_of(psi_i, sigma_i), x,
+                                     mode="eval")
 
-            all_logits = jax.vmap(fwd)(client_params["psi"], sigma, xw)
+            all_logits = jax.vmap(label_fwd)(client_params["psi"], sigma, xw)
             mean_logits = all_logits.mean(axis=0, keepdims=True)
             helper_logits = (mean_logits * n - all_logits) / jnp.maximum(
                 n - 1, 1)
@@ -362,8 +433,18 @@ class FedMatch(FLBase):
             h_pseudo, h_ok, _ = losses.pseudo_labels(
                 helper_logits, s.confidence_threshold)
 
+            kds = _client_dropout_keys(kd, n)
+
             def lf(psi):
-                logits = jax.vmap(fwd)(psi, sigma, xs)
+                if kds is None:
+                    logits = jax.vmap(
+                        lambda p_i, s_i, x: _full_forward(
+                            model, full_of(p_i, s_i), x))(psi, sigma, xs)
+                else:
+                    logits = jax.vmap(
+                        lambda p_i, s_i, x, k: _full_forward(
+                            model, full_of(p_i, s_i), x, rng=k))(
+                        psi, sigma, xs, kds)
                 ce = losses.cross_entropy(logits, pseudo, mask=ok)
                 icc = losses.cross_entropy(logits, h_pseudo, mask=h_ok)
                 # L1 sparsity on psi (FedMatch regularizer)

@@ -17,9 +17,18 @@ One aggregation round h:
       and EMA-updates its teacher bottom (Eq. (8)).
   (5) Bottom aggregation: FedAvg over client bottoms.
 
-Clients are simulated as a stacked leading axis on bottom parameters —
-vmap over clients inside one jitted step (on the production mesh that axis
-shards over the data axes; the FedAvg becomes an all-reduce)."""
+Clients are simulated as a stacked leading axis on bottom parameters.
+Two executors drive the cross-entity phase:
+
+  * vmapped (default): vmap over clients inside one jitted step, scanned
+    per phase (``core/scan.py``);
+  * client-sharded (``mesh=`` + ``REPRO_SHARD_CLIENTS``): the same scan
+    compiled under ``shard_map`` with the client axis sharded over the
+    mesh's data axes.  Per-client bottom updates run collective-free on
+    their shard; the top/proj gradient (Eq. (7)) is one psum; broadcast /
+    FedAvg are in-program (GSPMD all-reduce) instead of host-side
+    tree.maps.  Both executors are numerically equivalent (see
+    tests/test_shard_clients.py)."""
 from __future__ import annotations
 
 import os
@@ -30,12 +39,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core import losses
 from repro.core.adaptation import FreqController
 from repro.core.ema import ema_update
 from repro.core.queue import FeatureQueue, enqueue, init_queue
-from repro.core.scan import scan_phase
+from repro.core.scan import scan_phase, sharded_scan_phase
 from repro.core.split import (apply_projection_head, init_projection_head,
                               pool_features)
 from repro.data.augment import strong_augment, weak_augment
@@ -51,6 +61,27 @@ Array = jax.Array
 def _scan_rounds_default() -> bool:
     return os.environ.get("REPRO_SCAN_ROUNDS", "1").lower() not in (
         "0", "false", "off")
+
+
+def _shard_clients_default() -> bool:
+    return os.environ.get("REPRO_SHARD_CLIENTS", "1").lower() not in (
+        "0", "false", "off")
+
+
+def selection_rng(holder, rng_np: Optional[np.random.RandomState]
+                  ) -> np.random.RandomState:
+    """Host-side client-selection RandomState, created once per run.
+
+    ``rng_np`` (threaded from the launcher) wins; otherwise the
+    ``holder``'s ``_select_rng`` (seeded by ``init_state``) is used,
+    lazily falling back to seed 0 if ``init_state`` was never called.
+    Shared by the SemiSFL engine and every FL baseline so the
+    once-per-run semantics cannot drift between them."""
+    if rng_np is not None:
+        return rng_np
+    if holder._select_rng is None:
+        holder._select_rng = np.random.RandomState(0)
+    return holder._select_rng
 
 
 class SemiSFLState(NamedTuple):
@@ -81,7 +112,9 @@ class SemiSFLSystem:
                  lr_schedule: Optional[Callable] = None,
                  use_clustering: bool = True,
                  use_supcon: bool = True,
-                 scan_rounds: Optional[bool] = None):
+                 scan_rounds: Optional[bool] = None,
+                 mesh=None,
+                 shard_clients: Optional[bool] = None):
         self.cfg = cfg
         self.s = cfg.semisfl
         self.model = build_model(cfg)
@@ -95,6 +128,33 @@ class SemiSFLSystem:
         # default process-wide).
         self.scan_rounds = (_scan_rounds_default() if scan_rounds is None
                             else scan_rounds)
+        # client-sharded executor: active when a mesh is supplied, the scan
+        # executor is on, and REPRO_SHARD_CLIENTS (or the kwarg) says so.
+        self.mesh = mesh
+        self.shard_clients = (_shard_clients_default() if shard_clients
+                              is None else shard_clients)
+        self._use_sharded = (mesh is not None and self.shard_clients
+                             and self.scan_rounds)
+        if mesh is not None and not self._use_sharded:
+            import warnings
+            warnings.warn(
+                "SemiSFLSystem got mesh= but the client-sharded executor "
+                "is OFF (scan_rounds and shard_clients must both be on — "
+                "check REPRO_SCAN_ROUNDS / REPRO_SHARD_CLIENTS); falling "
+                "back to the vmapped executor", stacklevel=2)
+        if self._use_sharded:
+            from repro.launch.mesh import data_axes_size, mesh_axes
+            self._data_axes, _ = mesh_axes(mesh)
+            self._n_shards = data_axes_size(mesh, self._data_axes)
+            if self.n_active % self._n_shards:
+                raise ValueError(
+                    f"n_clients_per_round={self.n_active} must divide over "
+                    f"the mesh's {self._n_shards} data-axis shards "
+                    f"({self._data_axes})")
+        # host-side client-selection RNG: created once per run (init_state),
+        # NOT per round — seeding from state.round both forced a device
+        # sync every round and made every seed pick identical subsets.
+        self._select_rng: Optional[np.random.RandomState] = None
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -104,6 +164,7 @@ class SemiSFLSystem:
         mp = self.model.init(k1)
         params = {"bottom": mp["bottom"], "top": mp["top"],
                   "proj": init_projection_head(k2, self.cfg)}
+        self._select_rng = np.random.RandomState(seed)
         return SemiSFLState(
             params=params,
             teacher=jax.tree.map(jnp.copy, params),
@@ -123,16 +184,32 @@ class SemiSFLSystem:
     # ------------------------------------------------------------------
     # jitted steps
     # ------------------------------------------------------------------
-    def _forward(self, params, batch_x, *, train=True):
+    def _forward(self, params, batch_x, *, train=True, rng=None):
+        """Full forward.  ``train`` is threaded into the model applies so
+        stochastic layers (FC dropout on the AlexNet/VGG family) are live
+        only in training; ``eval_batch`` and the teacher forwards run with
+        ``train=False`` and are deterministic.  ``rng`` keys the dropout
+        masks (per sample); without it train-mode dropout is skipped."""
+        mode = "train" if train else "eval"
         feats, _, extras = self.model.bottom_apply(
-            params["bottom"], {"images": batch_x})
-        out, _ = self.model.top_apply(params["top"], feats, extras=extras)
+            params["bottom"], {"images": batch_x}, mode=mode)
+        if train and rng is not None:
+            extras = dict(extras,
+                          dropout_keys=jax.random.split(rng,
+                                                        batch_x.shape[0]))
+        out, _ = self.model.top_apply(params["top"], feats, extras=extras,
+                                      mode=mode)
         z = apply_projection_head(params["proj"], self.cfg,
                                   pool_features(self.cfg, feats))
         return out["logits"], z, feats
 
     def _build_steps(self):
         cfg, s = self.cfg, self.s
+        # Only stochastic-layer archs (FC dropout on the AlexNet/VGG
+        # family) consume dropout key material: dropout-free configs keep
+        # the exact PRNG stream of previous releases, so their training
+        # trajectories are unchanged by the eval-mode fix.
+        has_dropout = cfg.arch_type == "cnn" and cfg.cnn_dropout > 0.0
 
         # ---------------- supervised step (PS, Alg.1 lines 4-5) ----------
         # Carry-style ``(state, batch) -> (state, loss)``: the SAME function
@@ -141,7 +218,11 @@ class SemiSFLSystem:
         # by construction.
         def supervised_step(state: SemiSFLState, batch):
             x, y = batch
-            rng, k_aug = jax.random.split(state.rng)
+            if has_dropout:
+                rng, k_aug, k_drop = jax.random.split(state.rng, 3)
+            else:
+                rng, k_aug = jax.random.split(state.rng)
+                k_drop = None
             # labeled batches get the paper's weak augmentation a_w
             # (FixMatch/SemiFL convention); strong aug is reserved for the
             # student view of *unlabeled* data in semi_step below.
@@ -149,7 +230,7 @@ class SemiSFLSystem:
             lr = self.lr_schedule(state.step)
 
             def loss_fn(params):
-                logits, z, _ = self._forward(params, xs)
+                logits, z, _ = self._forward(params, xs, rng=k_drop)
                 ce = losses.cross_entropy(logits, y)
                 t = 0.0
                 if self.use_supcon:
@@ -165,8 +246,9 @@ class SemiSFLSystem:
             teacher = ema_update(state.teacher, params, s.ema_decay)
 
             # enqueue teacher features of this labeled batch (ground truth
-            # labels, always confident)
-            _, tz, _ = self._forward(teacher, xs)
+            # labels, always confident); the teacher forward is an
+            # inference pass — eval mode, no dropout
+            _, tz, _ = self._forward(teacher, xs, train=False)
             queue = enqueue(state.queue, jax.lax.stop_gradient(tz), y)
             new_state = SemiSFLState(params, teacher, opt, queue, rng,
                                      state.round, state.step + 1)
@@ -180,42 +262,63 @@ class SemiSFLSystem:
         #         teacher, queue, rng, step) — everything the phase mutates
         # plus the frozen teacher top/proj, so lax.scan threads it all
         # on-device.
-        def semi_step(carry, xu):
-            """xu: (N, B, H, W, C) unlabeled client batches."""
-            (client_bottoms, client_teacher_bottoms, params_top, params_proj,
-             teacher, queue, rng, step) = carry
-            n = xu.shape[0]
-            rng, kw, ks_ = jax.random.split(rng, 3)
-            xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
-            xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
-            lr = self.lr_schedule(step)
+        def t_bottom(pb, x):
+            feats, _, _ = self.model.bottom_apply(pb, {"images": x},
+                                                  mode="eval")
+            return feats
 
-            # teacher path: client-side teacher bottoms + server teacher top
-            def t_bottom(pb, x):
-                feats, _, extras = self.model.bottom_apply(pb, {"images": x})
-                return feats
+        def s_bottom(pb, x):
+            feats, _, _ = self.model.bottom_apply(pb, {"images": x},
+                                                  mode="train")
+            return feats
+
+        def teacher_targets(teacher, client_teacher_bottoms, xw):
+            """Teacher path: client-side teacher bottoms + server teacher
+            top — an inference pass (eval mode).  Per-sample ops only, so
+            the sharded executor's local block equals the vmapped
+            executor's corresponding rows."""
             t_feats = jax.vmap(t_bottom)(client_teacher_bottoms, xw)
             t_feats_flat = t_feats.reshape((-1,) + t_feats.shape[2:])
             t_out, _ = self.model.top_apply(
                 teacher["top"], t_feats_flat,
-                extras={"aux_loss": jnp.zeros((), jnp.float32)})
-            pseudo, conf_ok, conf = losses.pseudo_labels(
+                extras={"aux_loss": jnp.zeros((), jnp.float32)}, mode="eval")
+            pseudo, conf_ok, _ = losses.pseudo_labels(
                 t_out["logits"], s.confidence_threshold)
             pseudo = jax.lax.stop_gradient(pseudo)
             conf_ok = jax.lax.stop_gradient(conf_ok)
             tz = apply_projection_head(teacher["proj"], cfg,
                                        pool_features(cfg, t_feats_flat))
-            tz = jax.lax.stop_gradient(tz)
+            return pseudo, conf_ok, jax.lax.stop_gradient(tz)
+
+        def student_forward(bottoms, top, xs, dropout_keys):
+            feats = jax.vmap(s_bottom)(bottoms, xs)
+            feats_flat = feats.reshape((-1,) + feats.shape[2:])
+            out, _ = self.model.top_apply(
+                top, feats_flat,
+                extras={"aux_loss": jnp.zeros((), jnp.float32),
+                        "dropout_keys": dropout_keys}, mode="train")
+            return out, feats_flat
+
+        def semi_step(carry, xu):
+            """xu: (N, B, H, W, C) unlabeled client batches."""
+            (client_bottoms, client_teacher_bottoms, params_top, params_proj,
+             teacher, queue, rng, step) = carry
+            n, b = xu.shape[0], xu.shape[1]
+            if has_dropout:
+                rng, kw, ks_, kd = jax.random.split(rng, 4)
+                kds = jax.random.split(kd, n * b)   # per-sample dropout keys
+            else:
+                rng, kw, ks_ = jax.random.split(rng, 3)
+                kds = None
+            xw = jax.vmap(weak_augment)(jax.random.split(kw, n), xu)
+            xs = jax.vmap(strong_augment)(jax.random.split(ks_, n), xu)
+            lr = self.lr_schedule(step)
+
+            pseudo, conf_ok, tz = teacher_targets(
+                teacher, client_teacher_bottoms, xw)
 
             def loss_fn(bottoms, top, proj):
-                def s_bottom(pb, x):
-                    feats, _, extras = self.model.bottom_apply(pb, {"images": x})
-                    return feats
-                feats = jax.vmap(s_bottom)(bottoms, xs)
-                feats_flat = feats.reshape((-1,) + feats.shape[2:])
-                out, _ = self.model.top_apply(
-                    top, feats_flat,
-                    extras={"aux_loss": jnp.zeros((), jnp.float32)})
+                out, feats_flat = student_forward(bottoms, top, xs, kds)
                 h = losses.cross_entropy(out["logits"], pseudo, mask=conf_ok)
                 c = 0.0
                 if self.use_clustering:
@@ -254,12 +357,172 @@ class SemiSFLSystem:
         self.semi_step = jax.jit(semi_step)
         self.semi_phase = scan_phase(semi_step)
 
+        # ------------- client-sharded cross-entity step --------------------
+        # Same mathematics as semi_step, reorganized for shard_map: the
+        # shard sees its local client block; sum-form losses + psum'd
+        # global denominators make per-shard gradients EXACT pieces of the
+        # global-mean gradient, so Eq. (7) is one psum and Eq. (8) needs no
+        # collective at all.  The memory-queue write all-gathers the (tiny)
+        # projected features so the replicated queue stays bit-identical to
+        # the vmapped executor's.
+        def semi_step_sharded(carry, xu):
+            """xu: (n_local, B, H, W, C) — this shard's client block."""
+            (client_bottoms, client_teacher_bottoms, params_top, params_proj,
+             teacher, queue, rng, step) = carry
+            axes = self._data_axes
+            n_local, b = xu.shape[0], xu.shape[1]
+            n = n_local * self._n_shards            # global client count
+            off = compat.axis_index(axes) * n_local
+            # identical global key schedule as the vmapped step — slice
+            # this shard's client block so augmentation + dropout masks
+            # match the vmapped executor exactly
+            slice_ = jax.lax.dynamic_slice_in_dim
+            if has_dropout:
+                rng, kw, ks_, kd = jax.random.split(rng, 4)
+                kds = slice_(jax.random.split(kd, n * b), off * b,
+                             n_local * b)
+            else:
+                rng, kw, ks_ = jax.random.split(rng, 3)
+                kds = None
+            kws = slice_(jax.random.split(kw, n), off, n_local)
+            kss = slice_(jax.random.split(ks_, n), off, n_local)
+            xw = jax.vmap(weak_augment)(kws, xu)
+            xs = jax.vmap(strong_augment)(kss, xu)
+            lr = self.lr_schedule(step)
+
+            pseudo, conf_ok, tz = teacher_targets(
+                teacher, client_teacher_bottoms, xw)
+
+            # global loss denominators: the only pre-gradient collectives,
+            # two scalars
+            m_cnt = jax.lax.psum(conf_ok.astype(jnp.float32).sum(), axes)
+            m_norm = jnp.maximum(m_cnt, 1.0)
+            cl_cnt = cl_norm = jnp.float32(1.0)
+            if self.use_clustering:
+                cl_cnt = losses.clustering_anchor_count(
+                    pseudo, conf_ok, queue.label, queue.conf,
+                    queue.valid).astype(jnp.float32)
+                cl_norm = jnp.maximum(jax.lax.psum(cl_cnt, axes), 1.0)
+
+            def loss_fn(bottoms, top, proj):
+                out, feats_flat = student_forward(bottoms, top, xs, kds)
+                h_sum, _ = losses.cross_entropy_sum(out["logits"], pseudo,
+                                                    mask=conf_ok)
+                loss = h_sum / m_norm
+                c_sum = jnp.float32(0.0)
+                if self.use_clustering:
+                    z = apply_projection_head(proj, cfg,
+                                              pool_features(cfg, feats_flat))
+                    c_local = fused_clustering_loss(
+                        z, pseudo, conf_ok, queue.z,
+                        queue.label, queue.conf, queue.valid, s.temperature)
+                    c_sum = c_local * jnp.maximum(cl_cnt, 1.0)
+                    loss = loss + c_sum / cl_norm
+                return loss, (h_sum, c_sum)
+
+            (_, (h_sum, c_sum)), grads = jax.value_and_grad(
+                loss_fn, argnums=(0, 1, 2), has_aux=True)(
+                client_bottoms, params_top, params_proj)
+            g_bottoms, g_top, g_proj = grads
+            # Eq. (7): every shard's top/proj grad already carries the
+            # global 1/M normalization, so the client-mean gradient is ONE
+            # psum; Eq. (8): own gradient, collective-free — undo the
+            # global mean's 1/N factor
+            g_top = jax.lax.psum(g_top, axes)
+            g_proj = jax.lax.psum(g_proj, axes)
+            g_bottoms = jax.tree.map(lambda g: g * n, g_bottoms)
+            new_bottoms = jax.tree.map(lambda p, g: p - lr * g,
+                                       client_bottoms, g_bottoms)
+            new_top = jax.tree.map(lambda p, g: p - lr * g, params_top, g_top)
+            new_proj = jax.tree.map(lambda p, g: p - lr * g, params_proj,
+                                    g_proj)
+            new_teacher_bottoms = ema_update(client_teacher_bottoms,
+                                             new_bottoms, s.ema_decay)
+            gather = lambda v: jax.lax.all_gather(v, axes, axis=0, tiled=True)
+            queue = enqueue(queue, gather(tz), gather(pseudo),
+                            gather(conf_ok))
+            h = jax.lax.psum(h_sum, axes) / m_norm
+            loss = h + (jax.lax.psum(c_sum, axes) / cl_norm
+                        if self.use_clustering else 0.0)
+            mask_rate = 1.0 - m_cnt / (n * b)
+            new_carry = (new_bottoms, new_teacher_bottoms, new_top, new_proj,
+                         teacher, queue, rng, step + 1)
+            return new_carry, (loss, h, mask_rate)
+
+        self.semi_step_sharded = semi_step_sharded
+        if self._use_sharded:
+            self._build_sharded_exec()
+
         # ---------------- evaluation (teacher model, Section V-B) ---------
         def eval_batch(params, x, y):
-            logits, _, _ = self._forward(params, x)
+            logits, _, _ = self._forward(params, x, train=False)
             return (logits.argmax(-1) == y).astype(jnp.float32).sum()
 
         self.eval_batch = jax.jit(eval_batch)
+
+    def _build_sharded_exec(self):
+        """Compile the client-sharded executor: the shard_map'd scan phase
+        plus in-program broadcast (step (2)) and FedAvg (step (5))."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.sharding.specs import (client_batch_pspec,
+                                          leading_axis_pspecs,
+                                          replicated_pspecs,
+                                          semi_carry_pspecs, tree_shardings)
+
+        mesh, axes = self.mesh, self._data_axes
+        k = jax.random.PRNGKey(0)
+        abs_params = jax.eval_shape(self.model.init, k)
+        abs_bottom = abs_params["bottom"]
+        abs_stack = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((self.n_active,) + l.shape,
+                                           l.dtype), abs_bottom)
+        abs_proj = jax.eval_shape(
+            lambda kk: init_projection_head(kk, self.cfg), k)
+        abs_teacher = {"bottom": abs_bottom, "top": abs_params["top"],
+                       "proj": abs_proj}
+        abs_queue = jax.eval_shape(
+            lambda: init_queue(self.s.queue_len, self._proj_dim()))
+        abs_rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        abs_step = jax.ShapeDtypeStruct((), jnp.int32)
+        carry_abs = (abs_stack, abs_stack, abs_params["top"], abs_proj,
+                     abs_teacher, abs_queue, abs_rng, abs_step)
+
+        carry_specs = semi_carry_pspecs(carry_abs, axes)
+        batch_specs = client_batch_pspec(6, axes, client_dim=1)  # (K,N,B,...)
+        out_specs = (P(None), P(None), P(None))     # stacked loss/h/mask
+        self.semi_phase_sharded = sharded_scan_phase(
+            self.semi_step_sharded, mesh=mesh, carry_specs=carry_specs,
+            batch_specs=batch_specs, out_specs=out_specs)
+
+        # (K, N, B, ...) prefetch stacks land client-sharded on the mesh;
+        # the label stack is never consumed by the phase — don't ship it
+        self._stack_shardings = (
+            NamedSharding(mesh, client_batch_pspec(6, axes, client_dim=1)),
+            None)
+
+        stacked_sh = tree_shardings(mesh, leading_axis_pspecs(abs_stack,
+                                                              axes))
+        rep_sh = tree_shardings(mesh, replicated_pspecs(abs_bottom))
+        n_active = self.n_active
+
+        def _broadcast(global_bottom, teacher_bottom):
+            stack = lambda t: jnp.broadcast_to(t, (n_active,) + t.shape)
+            return (jax.tree.map(stack, global_bottom),
+                    jax.tree.map(stack, teacher_bottom))
+
+        def _aggregate(bottoms, t_bottoms):
+            mean = lambda t: t.mean(axis=0)
+            return (jax.tree.map(mean, bottoms),
+                    jax.tree.map(mean, t_bottoms))
+
+        # in-program collectives: broadcast materializes each client's
+        # replica directly on its shard; FedAvg compiles to one all-reduce
+        # over the data axes (GSPMD) instead of a host-side tree.map
+        self._broadcast_sharded = jax.jit(
+            _broadcast, out_shardings=(stacked_sh, stacked_sh))
+        self._aggregate_sharded = jax.jit(
+            _aggregate, out_shardings=(rep_sh, rep_sh))
 
     # ------------------------------------------------------------------
     # round driver
@@ -289,8 +552,13 @@ class SemiSFLSystem:
         backends do not reuse ``state`` after this call (keep
         ``jax.tree.map(jnp.copy, state)`` for rollback/best-checkpoint
         logic, or run with ``scan_rounds=False``).  CPU ignores
-        donation."""
-        rng_np = rng_np or np.random.RandomState(int(state.round))
+        donation.
+
+        Client selection draws from a host-side RandomState created once
+        per run (``init_state`` seeds it; ``rng_np`` overrides it) — never
+        from ``state.round``, which would force a device sync per round.
+        ``active`` remains the fixed-subset escape hatch for parity
+        tests."""
         k_s, k_u = controller.k_s, self.s.k_u
 
         # (1) supervised phase.  The LR schedule runs off the cumulative
@@ -311,11 +579,19 @@ class SemiSFLSystem:
 
         # (2) broadcast
         if active is None:
-            active = list(rng_np.choice(len(client_loaders_),
-                                        size=min(self.n_active,
-                                                 len(client_loaders_)),
-                                        replace=False))
-        bottoms, t_bottoms = self.broadcast(state)
+            active = list(selection_rng(self, rng_np).choice(
+                len(client_loaders_),
+                size=min(self.n_active, len(client_loaders_)),
+                replace=False))
+        if self._use_sharded:
+            if len(active) != self.n_active:
+                raise ValueError(
+                    f"sharded executor needs exactly n_clients_per_round="
+                    f"{self.n_active} active clients, got {len(active)}")
+            bottoms, t_bottoms = self._broadcast_sharded(
+                state.params["bottom"], state.teacher["bottom"])
+        else:
+            bottoms, t_bottoms = self.broadcast(state)
 
         # (3)-(4) cross-entity phase
         carry = (bottoms, t_bottoms, state.params["top"],
@@ -323,6 +599,13 @@ class SemiSFLSystem:
                  state.step)
         if k_u == 0:
             f_u_acc, mask_acc = np.zeros((0,)), np.zeros((0,))
+        elif self._use_sharded:
+            xus, _ = stack_client_batches_many(
+                client_loaders_, active, k_u,
+                shardings=self._stack_shardings)
+            carry, (losses_u, _h, masks) = self.semi_phase_sharded(
+                carry, xus)
+            f_u_acc, mask_acc = np.asarray(losses_u), np.asarray(masks)
         elif self.scan_rounds:
             xus, _ = stack_client_batches_many(client_loaders_, active, k_u)
             carry, (losses_u, _h, masks) = self.semi_phase(
@@ -341,9 +624,14 @@ class SemiSFLSystem:
         # (5) aggregate — the global bottom AND the teacher bottom: the
         # EMA-updated client teacher bottoms (Eq. (8)) are FedAvg'd into
         # w~_c so `evaluate(use_teacher=True)` sees the cross-entity phase.
-        params = {"bottom": self.aggregate(bottoms), "top": top,
-                  "proj": proj}
-        teacher = dict(teacher, bottom=self.aggregate(t_bottoms))
+        if self._use_sharded:
+            agg_bottom, agg_t_bottom = self._aggregate_sharded(bottoms,
+                                                               t_bottoms)
+        else:
+            agg_bottom = self.aggregate(bottoms)
+            agg_t_bottom = self.aggregate(t_bottoms)
+        params = {"bottom": agg_bottom, "top": top, "proj": proj}
+        teacher = dict(teacher, bottom=agg_t_bottom)
         state = SemiSFLState(params, teacher, state.opt, queue, rng,
                              state.round + 1, step)
 

@@ -95,6 +95,37 @@ def cross_entropy(logits: Array, labels: Array,
     return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
 
 
+def cross_entropy_sum(logits: Array, labels: Array,
+                      mask: Array | None = None) -> tuple[Array, Array]:
+    """Sum-form of :func:`cross_entropy`: ``(nll_sum, count)``.
+
+    ``cross_entropy(...) == nll_sum / max(count, 1)``.  The client-sharded
+    cross-entity step computes the numerator per shard and ``psum``s both
+    pieces, reconstructing the exact global masked mean without any shard
+    seeing the other shards' samples."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.sum(), jnp.float32(ll.size)
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum(), mask.sum()
+
+
+def clustering_anchor_count(pseudo: Array, anchor_ok: Array,
+                            queue_labels: Array, queue_conf: Array,
+                            queue_valid: Array) -> Array:
+    """Number of anchors with a non-empty positive set — the denominator of
+    Eq. (5) as computed by :func:`clustering_loss` and the fused kernel
+    (``has_pos.sum()``).  Cheap (no similarity matmul), so the sharded step
+    can ``psum`` it to rebuild the global mean from per-shard kernel calls:
+    ``global_loss = psum(local_loss * max(local_count, 1)) /
+    max(psum(local_count), 1)``."""
+    pos = (pseudo[:, None] == queue_labels[None, :]) \
+        & (queue_conf & queue_valid)[None, :]
+    pos = pos & anchor_ok[:, None]
+    return pos.any(axis=-1).sum()
+
+
 def pseudo_labels(teacher_logits: Array, tau: float):
     """Eq. (1) machinery: argmax labels + confidence mask."""
     probs = jax.nn.softmax(teacher_logits.astype(jnp.float32), axis=-1)

@@ -83,3 +83,55 @@ def scan_phase(step_fn: Callable[[Carry, Batch], Tuple[Carry, Any]], *,
     if not jit:
         return phase
     return jax.jit(phase, donate_argnums=(0,) if donate_carry else ())
+
+
+def sharded_scan_phase(step_fn: Callable[[Carry, Batch], Tuple[Carry, Any]],
+                       *, mesh, carry_specs, batch_specs, out_specs,
+                       donate_carry: bool = True,
+                       unroll: Union[int, bool, None] = None,
+                       jit: bool = True
+                       ) -> Callable[[Carry, Batch], Tuple[Carry, Any]]:
+    """:func:`scan_phase` compiled under ``shard_map`` over ``mesh``.
+
+    The whole K-iteration phase — scan included — runs inside one
+    ``shard_map`` region, so ``step_fn`` sees its *local* block of any
+    carry/batch leaf whose spec names mesh axes (the client-stacked
+    bottoms and the ``(K, N, B, ...)`` client batches shard the client
+    axis over the data axes) and the full value of every replicated leaf
+    (top/proj/teacher/queue/rng/step).  ``step_fn`` is responsible for its
+    own collectives: in the cross-entity step the per-client bottom
+    updates need none, the top/proj gradients are one psum-mean, and the
+    queue write all-gathers the (tiny) projected features.
+
+    ``carry_specs`` / ``batch_specs`` / ``out_specs`` are PartitionSpec
+    pytrees matching ``carry``, ``batches`` and the stacked per-step
+    outputs (see ``repro.sharding.specs.semi_carry_pspecs``).  Goes
+    through ``repro.compat.shard_map`` so JAX 0.4.37 and current both
+    work; the replication check is disabled because replicated outputs
+    are established via psum, which 0.4.x ``check_rep`` cannot always
+    prove."""
+    from repro.compat import shard_map
+
+    if unroll is None:
+        unroll = default_unroll()
+
+    def phase(carry: Carry, batches: Batch):
+        return jax.lax.scan(step_fn, carry, batches, unroll=unroll)
+
+    mapped = shard_map(phase, mesh=mesh,
+                       in_specs=(carry_specs, batch_specs),
+                       out_specs=(carry_specs, out_specs),
+                       check_vma=False)
+    if not jit:
+        return mapped
+    # Pin the jit-level output shardings to the declared specs: without
+    # this GSPMD may tag replicated outputs with degenerate data-axis
+    # shardings, so the NEXT round's phase (and the supervised phase fed
+    # from the same state) sees differently-committed inputs and
+    # recompiles — one spurious multi-second compile per executor.
+    from jax.sharding import NamedSharding, PartitionSpec as _P
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             (carry_specs, out_specs),
+                             is_leaf=lambda x: isinstance(x, _P))
+    return jax.jit(mapped, donate_argnums=(0,) if donate_carry else (),
+                   out_shardings=shardings)

@@ -61,9 +61,27 @@ def stack_client_batches(loaders: list[Loader], active: list[int]):
 
 
 def stack_client_batches_many(loaders: list[Loader], active: list[int],
-                              k: int) -> tuple[np.ndarray, np.ndarray]:
+                              k: int, *, shardings=None
+                              ) -> tuple[np.ndarray, np.ndarray]:
     """Prefetch ``k`` rounds of client batches -> ``(K, N, B, ...)`` stacks
     for the scanned cross-entity phase.  Iteration-major draw order matches
-    ``k`` successive :func:`stack_client_batches` calls exactly."""
+    ``k`` successive :func:`stack_client_batches` calls exactly.
+
+    With ``shardings=(x_sharding, y_sharding)`` (NamedShardings whose spec
+    puts the client axis on the mesh's data axes) the stacks are
+    ``device_put`` directly onto the mesh, so each client's ``(K, B, ...)``
+    slab lands on its shard and the sharded phase executor starts without
+    an extra host->replicated->resharded hop.  Either entry may be None to
+    skip that transfer (the cross-entity phase never consumes the labels,
+    so the engine passes ``(x_sharding, None)``)."""
     xs, ys = zip(*(stack_client_batches(loaders, active) for _ in range(k)))
-    return np.stack(xs), np.stack(ys)
+    xs, ys = np.stack(xs), np.stack(ys)
+    if shardings is None:
+        return xs, ys
+    import jax  # host-only module otherwise; keep the cheap-import property
+    x_sharding, y_sharding = shardings
+    if x_sharding is not None:
+        xs = jax.device_put(xs, x_sharding)
+    if y_sharding is not None:
+        ys = jax.device_put(ys, y_sharding)
+    return xs, ys

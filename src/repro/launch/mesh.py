@@ -21,11 +21,32 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_host_mesh(model: int = 1):
-    """Whatever this host actually has (CPU tests / examples)."""
+def make_host_mesh(model: int = 1, *, pods: int = 1):
+    """Whatever this host actually has (CPU tests / examples).
+
+    ``pods > 1`` produces the multi-pod layout ``("pod", "data", "model")``
+    on host devices — the pod axis is an outer data axis, exactly as in
+    :func:`make_production_mesh`, so client-axis sharding and its tests can
+    exercise the 3-axis (multi-pod) spec without a 512-chip fleet."""
     n = len(jax.devices())
-    data = max(1, n // model)
+    data = max(1, n // (model * pods))
+    if pods > 1:
+        return make_mesh((pods, data, model), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
     return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def make_client_mesh(n_clients: int, model: int = 1):
+    """Largest host mesh the client-sharded executor accepts for
+    ``n_clients`` active clients: the data axis is the biggest device
+    count that divides ``n_clients`` (the shard count must divide the
+    client count).  1 device -> a degenerate (1, model) mesh, which still
+    exercises the sharded program."""
+    avail = max(1, len(jax.devices()) // model)
+    data = max(d for d in range(1, avail + 1) if n_clients % d == 0)
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[: data * model],
                      axis_types=(AxisType.Auto, AxisType.Auto))
 
 
@@ -35,3 +56,14 @@ def mesh_axes(mesh) -> tuple[tuple[str, ...], str]:
     model_axis = "model" if "model" in names else names[-1]
     data_axes = tuple(n for n in names if n != model_axis)
     return data_axes, model_axis
+
+
+def data_axes_size(mesh, data_axes=None) -> int:
+    """Number of shards the client axis spreads over (product of the data
+    axes' sizes — pod x data on a multi-pod mesh)."""
+    if data_axes is None:
+        data_axes, _ = mesh_axes(mesh)
+    size = 1
+    for a in data_axes:
+        size *= mesh.shape[a]
+    return size

@@ -33,10 +33,10 @@ from repro.kernels import clustering_loss as fused_clustering_loss
 from repro.core.ema import ema_update
 from repro.core.queue import FeatureQueue, enqueue, init_queue
 from repro.core.split import apply_projection_head, init_projection_head, pool_features
-from repro.launch.mesh import mesh_axes
+from repro.launch.mesh import data_axes_size, mesh_axes
 from repro.models import DistContext, build_model
-from repro.sharding.specs import (client_stack_pspecs, tree_pspecs,
-                                  tree_shardings)
+from repro.sharding.specs import (client_batch_pspec, client_stack_pspecs,
+                                  tree_pspecs, tree_shardings)
 
 Array = jax.Array
 
@@ -182,13 +182,13 @@ def arg_shardings(plan: StepPlan, mesh: Mesh, specs: dict) -> dict:
         nd = len(leaf.shape)
         name = path[-1].key if hasattr(path[-1], "key") else ""
         if plan.kind == "train":
-            # leading axis is the client axis
-            if name == "mrope_positions":       # (n, 3, b, s)
-                return P(d, None, None, None)
-            return P(*( [d] + [None] * (nd - 1) ))
+            # leading axis is the client axis ((n, 3, b, s) for mrope —
+            # still axis 0); same spec the engine's sharded cross-entity
+            # executor uses for its (K, N, B, ...) stacks (client_dim=1)
+            return client_batch_pspec(nd, d)
         # serving: batch dim 0 (mrope: dim 1); don't shard batch==1
         bdim = 1 if name == "mrope_positions" else 0
-        if leaf.shape[bdim] % _axes_size(mesh, d) == 0:
+        if leaf.shape[bdim] % data_axes_size(mesh, d) == 0:
             spec = [None] * nd
             spec[bdim] = d
             return P(*spec)
@@ -200,7 +200,7 @@ def arg_shardings(plan: StepPlan, mesh: Mesh, specs: dict) -> dict:
         # (long_500k, B=1), shard the longest divisible axis (the sequence
         # buffer) instead.
         nd = len(leaf.shape)
-        dsize = _axes_size(mesh, d)
+        dsize = data_axes_size(mesh, d)
         b = plan.shape.global_batch
         spec = [None] * nd
         if b % dsize == 0:
@@ -265,13 +265,6 @@ def arg_shardings(plan: StepPlan, mesh: Mesh, specs: dict) -> dict:
     out["batch"] = sanitize(out["batch"], specs["batch"])
     return jax.tree.map(lambda s: NamedSharding(mesh, s), out,
                         is_leaf=lambda x: isinstance(x, P))
-
-
-def _axes_size(mesh: Mesh, axes: tuple) -> int:
-    n = 1
-    for a in axes:
-        n *= mesh.shape[a]
-    return n
 
 
 # ===========================================================================

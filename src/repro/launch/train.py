@@ -33,7 +33,8 @@ def build_system(name: str, cfg, **kw):
         return SemiSFLSystem(cfg, **kw)
     if name == "fedswitch-sl":
         return make_fedswitch_sl(cfg, **kw)
-    return BASELINES[name](cfg, **kw)
+    kw.pop("mesh", None)                 # full-model baselines: no split,
+    return BASELINES[name](cfg, **kw)    # no client-sharded executor
 
 
 def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
@@ -42,7 +43,7 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
                  n_active: int = 5, dirichlet: float = 0.0,
                  labeled_batch: int = 32, client_batch: int = 16,
                  seed: int = 0, smoke: bool = True, eval_every: int = 5,
-                 k_s: int = 15, k_u: int = 4, log=print):
+                 k_s: int = 15, k_u: int = 4, mesh=None, log=print):
     from dataclasses import replace
     cfg = smoke_config(arch) if smoke else get_config(arch)
     cfg = replace(cfg, semisfl=replace(
@@ -64,21 +65,31 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
         parts = [unl_idx[p] for p in
                  uniform_partition(seed, len(unl_idx), n_clients)]
 
-    sys_ = build_system(baseline, cfg, n_clients_per_round=n_active)
+    sys_ = build_system(baseline, cfg, n_clients_per_round=n_active,
+                        mesh=mesh)
     state = sys_.init_state(seed)
     ctrl = make_controller(cfg, n_labeled, len(train.y))
     lab = Loader(train, lab_idx, labeled_batch, seed)
     cls = client_loaders(train, parts, client_batch, seed + 1)
+    # ONE host-side selection RandomState per run, threaded through every
+    # round: different seeds pick different client subsets, and no round
+    # blocks on a device->host sync of state.round.
+    sel_rng = np.random.RandomState(seed)
 
     history = []
     for r in range(rounds):
         t0 = time.time()
-        state, m = sys_.run_round(state, lab, cls, ctrl)
+        state, m = sys_.run_round(state, lab, cls, ctrl, rng_np=sel_rng)
         rec = {"round": r, "k_s": ctrl.k_s, "dt": round(time.time() - t0, 2)}
+        if r % eval_every == 0 or r == rounds - 1:
+            acc = sys_.evaluate(state, test.x, test.y)
+            if not isinstance(m, dict):
+                # keep the caller-held RoundMetrics truthful too (the log
+                # line below reads rec, not m)
+                m.test_acc = acc
+            rec["test_acc"] = acc
         rec.update(m if isinstance(m, dict) else
                    {"f_s": m.f_s, "f_u": m.f_u, "mask_rate": m.mask_rate})
-        if r % eval_every == 0 or r == rounds - 1:
-            rec["test_acc"] = sys_.evaluate(state, test.x, test.y)
         history.append(rec)
         log(f"[{baseline}] round {r}: " + " ".join(
             f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
@@ -99,14 +110,23 @@ def main() -> None:
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="run the cross-entity phase client-sharded over "
+                         "this host's devices (see README; the mesh's "
+                         "data axis is sized to the largest device count "
+                         "that divides --active)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
+    mesh = None
+    if args.shard_clients:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(args.active)
     state, history, _ = run_training(
         arch=args.arch, baseline=args.baseline, rounds=args.rounds,
         n_labeled=args.labeled, n_total=args.total, n_clients=args.clients,
         n_active=args.active, dirichlet=args.dirichlet, seed=args.seed,
-        smoke=not args.full_config)
+        smoke=not args.full_config, mesh=mesh)
     if args.ckpt:
         save_state(args.ckpt, state.params,
                    {"history": history, "arch": args.arch,

@@ -104,6 +104,24 @@ class CNNModel:
                 x = _maxpool(x)
         return x, None, {"aux_loss": jnp.zeros((), jnp.float32)}
 
+    def _dropout(self, x: Array, keys: Array, layer: int) -> Array:
+        """Inverted dropout on FC activations, keyed PER SAMPLE.
+
+        ``keys`` is a ``(B, key)`` stack, one PRNG key per flattened
+        sample; folding in the layer index decorrelates the FC layers.
+        Per-sample keying makes the mask a pure function of (sample key,
+        layer), so the client-sharded executor reproduces the vmapped
+        executor's masks exactly by slicing its shard's block out of the
+        same globally-split key array."""
+        rate = self.cfg.cnn_dropout
+
+        def one(k, row):
+            keep = jax.random.bernoulli(jax.random.fold_in(k, layer),
+                                        1.0 - rate, row.shape)
+            return jnp.where(keep, row / (1.0 - rate), 0.0)
+
+        return jax.vmap(one)(keys, x)
+
     def top_apply(self, params: Params, features: Array, *, extras: dict,
                   mode: str = "train", cache=None,
                   dist: DistContext = DistContext()):
@@ -115,8 +133,13 @@ class CNNModel:
                 x = _maxpool(x)
         b = x.shape[0]
         x = x.reshape(b, -1)
-        for p in params["fcs"]:
+        drop_keys = extras.get("dropout_keys")
+        use_dropout = (mode == "train" and self.cfg.cnn_dropout > 0.0
+                       and drop_keys is not None)
+        for li, p in enumerate(params["fcs"]):
             x = jax.nn.relu(x @ p["w"] + p["b"])
+            if use_dropout:
+                x = self._dropout(x, drop_keys, li)
         logits = x @ params["cls"]["w"] + params["cls"]["b"]
         return ({"logits": logits, "hidden": x,
                  "aux_loss": extras.get("aux_loss", 0.0)}, None)

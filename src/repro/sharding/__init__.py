@@ -1,5 +1,9 @@
-from repro.sharding.specs import (batch_pspec, client_stack_pspecs,
-                                  leaf_pspec, tree_pspecs, tree_shardings)
+from repro.sharding.specs import (batch_pspec, client_batch_pspec,
+                                  client_stack_pspecs, leading_axis_pspecs,
+                                  leaf_pspec, replicated_pspecs,
+                                  semi_carry_pspecs, tree_pspecs,
+                                  tree_shardings)
 
-__all__ = ["batch_pspec", "client_stack_pspecs", "leaf_pspec", "tree_pspecs",
-           "tree_shardings"]
+__all__ = ["batch_pspec", "client_batch_pspec", "client_stack_pspecs",
+           "leading_axis_pspecs", "leaf_pspec", "replicated_pspecs",
+           "semi_carry_pspecs", "tree_pspecs", "tree_shardings"]

@@ -132,3 +132,58 @@ def batch_pspec(ndim: int, data_axes: tuple, *, batch_dim: int = 0,
     if shard_batch:
         spec[batch_dim] = data_axes
     return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entity (client-sharded) round executor specs
+# ---------------------------------------------------------------------------
+
+def _leaf_ndim(leaf) -> int:
+    return leaf.ndim if hasattr(leaf, "ndim") else np.ndim(leaf)
+
+
+def replicated_pspecs(tree: Any) -> Any:
+    """Rank-matched fully-replicated specs for every leaf of ``tree``."""
+    return jax.tree.map(lambda l: P(*([None] * _leaf_ndim(l))), tree)
+
+
+def leading_axis_pspecs(tree: Any, data_axes: tuple) -> Any:
+    """Client-stacked trees with ONLY the leading (client) axis sharded.
+
+    Unlike :func:`client_stack_pspecs` this applies no model-axis rules to
+    the trailing dims — the cross-entity phase keeps every per-client
+    parameter whole on its shard (top/proj stay replicated), so the bottom
+    update is collective-free by construction."""
+    return jax.tree.map(
+        lambda l: P(data_axes, *([None] * (_leaf_ndim(l) - 1))), tree)
+
+
+def client_batch_pspec(ndim: int, data_axes: tuple, *,
+                       client_dim: int = 0) -> P:
+    """Spec for a client-stacked batch leaf: the client axis shards over
+    the data axes, everything else (iteration axis K, per-client batch,
+    spatial dims) stays unsharded.  Shared by the LM-task ``arg_shardings``
+    (client axis leading) and the scanned cross-entity phase's
+    ``(K, N, B, ...)`` stacks (client axis 1)."""
+    return batch_pspec(ndim, data_axes, batch_dim=client_dim)
+
+
+def semi_carry_pspecs(carry: Any, data_axes: tuple) -> Any:
+    """PartitionSpecs for the cross-entity scan carry of
+    ``core/engine.py::semi_step``:
+
+        (client_bottoms, client_teacher_bottoms, top, proj, teacher,
+         queue, rng, step)
+
+    The two client-stacked bottom trees shard their leading client axis
+    over the mesh's data axes; the server-side state (top/proj, frozen
+    teacher, memory queue, rng, step counter) replicates."""
+    (bottoms, t_bottoms, top, proj, teacher, queue, rng, step) = carry
+    return (leading_axis_pspecs(bottoms, data_axes),
+            leading_axis_pspecs(t_bottoms, data_axes),
+            replicated_pspecs(top),
+            replicated_pspecs(proj),
+            replicated_pspecs(teacher),
+            replicated_pspecs(queue),
+            replicated_pspecs(rng),
+            replicated_pspecs(step))

@@ -94,3 +94,32 @@ def test_teacher_bottom_learns_from_cross_entity_phase():
                         without.teacher["bottom"])
     assert max(jax.tree.leaves(diff)) > 0, (
         "teacher bottom ignored the cross-entity phase (Eq. (8) dropped)")
+
+
+def test_eval_mode_deterministic_and_differs_from_train():
+    """Regression: `_forward` used to drop its `train` flag, so eval (and
+    the teacher forwards) ran stochastic train-mode paths.  On an arch
+    with dropout (the AlexNet/VGG FC convention), eval must be
+    deterministic and differ from a keyed train-mode forward."""
+    cfg = smoke_config("paper-alexnet")          # cnn_dropout = 0.5
+    assert cfg.cnn_dropout > 0
+    sys_ = SemiSFLSystem(cfg, n_clients_per_round=2)
+    state = sys_.init_state(0)
+    x = jnp.asarray(np.random.RandomState(0).rand(
+        4, cfg.image_size, cfg.image_size, 3), jnp.float32)
+
+    fwd = lambda **kw: np.asarray(sys_._forward(state.params, x, **kw)[0])
+    e1, e2 = fwd(train=False), fwd(train=False)
+    np.testing.assert_array_equal(e1, e2)        # eval is deterministic
+    t1 = fwd(train=True, rng=jax.random.PRNGKey(1))
+    t2 = fwd(train=True, rng=jax.random.PRNGKey(2))
+    assert np.abs(t1 - e1).max() > 0             # dropout live in train
+    assert np.abs(t1 - t2).max() > 0             # ...and actually keyed
+    # train mode without a dropout key degrades to the deterministic path
+    np.testing.assert_array_equal(fwd(train=True), e1)
+
+    # eval_batch runs the eval-mode forward: bit-identical across calls
+    y = jnp.zeros((4,), jnp.int32)
+    a1 = float(sys_.eval_batch(state.params, x, y))
+    a2 = float(sys_.eval_batch(state.params, x, y))
+    assert a1 == a2
