@@ -83,13 +83,15 @@ def make_rig(*, arch="paper-cnn", n_labeled=100, n_total=2400, n_test=300,
 
 
 def build_system(method: str, cfg, n_active: int, scan_rounds=None,
-                 mesh=None):
+                 mesh=None, prefetch=None):
     if method == "semisfl":
         return SemiSFLSystem(cfg, n_clients_per_round=n_active,
-                             scan_rounds=scan_rounds, mesh=mesh)
+                             scan_rounds=scan_rounds, mesh=mesh,
+                             prefetch=prefetch)
     if method == "fedswitch-sl":
         return make_fedswitch_sl(cfg, n_clients_per_round=n_active,
-                                 scan_rounds=scan_rounds, mesh=mesh)
+                                 scan_rounds=scan_rounds, mesh=mesh,
+                                 prefetch=prefetch)
     return BASELINES[method](cfg, n_clients_per_round=n_active)
 
 

@@ -1,11 +1,16 @@
 """Roofline report: reads the dry-run artifacts (reports/dryrun/*.json)
 and prints the per-(arch x shape x mesh) three-term roofline table
-(EXPERIMENTS.md §Roofline). No JAX work — pure aggregation."""
+(EXPERIMENTS.md §Roofline). No JAX work in :func:`run` — pure
+aggregation.  :func:`scan_unroll_micro` is the exception: a live
+micro-benchmark tracking the ROADMAP's "XLA:CPU scan-of-conv regression"
+(rolled ``lax.scan`` compiles the larger smoke CNN's conv fwd/bwd ~2x
+slower per iteration than the unrolled form)."""
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 
 HEADERS = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
            "dominant", "hlo_flops/dev", "useful_ratio", "compile_s"]
@@ -17,6 +22,58 @@ def load_records(path: str = "reports/dryrun") -> list[dict]:
         with open(f) as fh:
             recs.append(json.load(fh))
     return recs
+
+
+def scan_unroll_micro(k: int = 6, repeats: int = 5, log=print) -> dict:
+    """Rolled vs fully-unrolled scan of the smoke-CNN supervised step.
+
+    Times the SAME jitted K-iteration supervised phase compiled with
+    ``unroll=1`` (the default rolled ``while`` loop) and ``unroll=True``
+    (the ``REPRO_SCAN_UNROLL=full`` workaround) on the default smoke CNN
+    — the config where XLA:CPU loses conv fusion inside the loop body.
+    Returns ``us_per_iter_scan_rolled`` / ``us_per_iter_scan_unrolled``
+    and their ratio (>1: the regression is present), recorded into
+    ``BENCH_smoke.json`` so the eventual layout/fusion fix has a tracked
+    baseline.  Compile time is excluded (one warm-up call per variant);
+    carry donation is off so the timing loop can reuse the same state."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.core.engine import SemiSFLSystem
+    from repro.core.scan import scan_phase
+    from repro.data import Loader, make_image_dataset
+
+    cfg = smoke_config("paper-cnn")     # the LARGER smoke CNN (not the
+    sys_ = SemiSFLSystem(cfg)           # dispatch-bound tiny bench rig)
+    state = sys_.init_state(0)
+    ds = make_image_dataset(0, num_classes=cfg.num_classes, n=256,
+                            image_size=cfg.image_size)
+    xs, ys = Loader(ds, None, 16, seed=0).next_many(k)
+    batches = (jnp.asarray(xs), jnp.asarray(ys))
+
+    out = {}
+    for name, unroll in (("rolled", 1), ("unrolled", True)):
+        phase = scan_phase(sys_._supervised_step_fn, donate_carry=False,
+                           unroll=unroll)
+        t0 = time.time()
+        jax.block_until_ready(phase(state, batches))    # compile + warm
+        compile_s = time.time() - t0
+        t0 = time.time()
+        for _ in range(repeats):
+            _, losses = phase(state, batches)
+        jax.block_until_ready(losses)
+        us = (time.time() - t0) * 1e6 / (repeats * k)
+        out[f"us_per_iter_scan_{name}"] = round(us, 1)
+        out[f"compile_s_scan_{name}"] = round(compile_s, 2)
+    out["scan_unroll_ratio"] = round(
+        out["us_per_iter_scan_rolled"] / out["us_per_iter_scan_unrolled"],
+        2)
+    log(f"[roofline] scan-of-conv: rolled="
+        f"{out['us_per_iter_scan_rolled']}us/iter unrolled="
+        f"{out['us_per_iter_scan_unrolled']}us/iter "
+        f"ratio={out['scan_unroll_ratio']}x")
+    return out
 
 
 def run(quick: bool = False, log=print) -> list[dict]:

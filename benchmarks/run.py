@@ -68,31 +68,39 @@ def _smoke_mesh(n_active: int):
 
 def run_smoke(out_dir: str) -> dict:
     """Tiny config end-to-end: exercises the data pipeline, the engine's
-    multi-client round (scanned, eager AND client-sharded executors), the
-    dispatched clustering kernel, and the adaptation controller, in
-    seconds.  Writes BENCH_smoke.json with ``us_per_round_scanned`` /
-    ``us_per_round_eager`` / ``us_per_round_sharded`` so CI can gate
-    executor regressions."""
+    multi-client round (scanned, eager, client-sharded AND prefetched
+    executors), the dispatched clustering kernel, and the adaptation
+    controller, in seconds.  Writes BENCH_smoke.json with
+    ``us_per_round_scanned`` / ``us_per_round_eager`` /
+    ``us_per_round_sharded`` / ``us_per_round_prefetch`` (+
+    ``prefetch_overlap_frac``) so CI can gate executor regressions, and
+    the rolled-vs-unrolled scan-of-conv micro ratio the ROADMAP tracks."""
     from repro.kernels import dispatch
 
     from benchmarks.common import build_system, run_method
+    from benchmarks.roofline import scan_unroll_micro
 
     rounds = 3
     n_active = 2
     mesh = _smoke_mesh(n_active)
     log = lambda *a: print("#", *a)
-    timings, res = {}, None
-    for mode, scan, m in (("eager", False, None), ("scanned", True, None),
-                          ("sharded", True, mesh)):
+    timings, res, pf_stats = {}, None, None
+    for mode, scan, m, pf in (("eager", False, None, None),
+                              ("scanned", True, None, None),
+                              ("sharded", True, mesh, None),
+                              ("prefetch", True, None, True)):
         rig = _smoke_rig()
         sys_ = build_system("semisfl", rig[0], n_active, scan_rounds=scan,
-                            mesh=m)
+                            mesh=m, prefetch=pf)
         if m is not None:
             # a REPRO_* env override downgrading the executor would make
             # us record vmapped timings as "sharded" — refuse instead
             assert sys_._use_sharded, (
                 "sharded smoke entry fell back to the vmapped executor "
                 "(REPRO_SCAN_ROUNDS / REPRO_SHARD_CLIENTS override?)")
+        if pf:
+            assert sys_.prefetch, (
+                "prefetch smoke entry fell back to the inline loaders")
         # warm-up rounds on the same system: jit tracing/compilation happens
         # here, so us_per_round below tracks engine time, not the compiler.
         # 3 rounds: with the sharded executor the round-N inputs pass
@@ -104,6 +112,9 @@ def run_smoke(out_dir: str) -> dict:
         res = run_method("semisfl", rounds=rounds, n_active=n_active,
                          eval_every=2, system=sys_, rig=rig, log=log)
         timings[mode] = (time.time() - t0) * 1e6 / rounds
+        if pf:
+            pf_stats = sys_.prefetch_stats()
+            sys_.close()
     rec = {
         "benchmark": "smoke",
         "method": "semisfl",
@@ -114,14 +125,23 @@ def run_smoke(out_dir: str) -> dict:
         "us_per_round_scanned": round(timings["scanned"]),
         "us_per_round_eager": round(timings["eager"]),
         "us_per_round_sharded": round(timings["sharded"]),
+        "us_per_round_prefetch": round(timings["prefetch"]),
         "scan_speedup": round(timings["eager"] / timings["scanned"], 2),
         # sharded-vs-vmapped on the scanned phase (>1: sharding pays off;
         # on a 1-device mesh this is the shard_map overhead ratio)
         "shard_speedup": round(timings["scanned"] / timings["sharded"], 2),
+        # prefetched-vs-inline loaders on the scanned executor (>1: the
+        # background worker hides host stacking + H2D behind device time)
+        "prefetch_speedup": round(timings["scanned"] / timings["prefetch"],
+                                  2),
+        "prefetch_overlap_frac": round(pf_stats["overlap_frac"], 3),
+        "prefetch_cancels": pf_stats["cancels"],
         "shard_devices": mesh.shape["data"],
         "kernel_backend": dispatch.resolve(),
         "jax_version": __import__("jax").__version__,
     }
+    # ROADMAP "XLA:CPU scan-of-conv regression" tracker
+    rec.update(scan_unroll_micro(log=log))
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "BENCH_smoke.json"), "w") as f:
         json.dump(rec, f, indent=2)

@@ -51,6 +51,7 @@ from repro.core.split import (apply_projection_head, init_projection_head,
 from repro.data.augment import strong_augment, weak_augment
 from repro.data.pipeline import (Loader, stack_client_batches,
                                  stack_client_batches_many)
+from repro.data.prefetch import RoundPrefetcher, prefetch_default
 from repro.kernels import clustering_loss as fused_clustering_loss
 from repro.models import build_model
 from repro.optim import apply_updates, sgd
@@ -114,7 +115,8 @@ class SemiSFLSystem:
                  use_supcon: bool = True,
                  scan_rounds: Optional[bool] = None,
                  mesh=None,
-                 shard_clients: Optional[bool] = None):
+                 shard_clients: Optional[bool] = None,
+                 prefetch: Optional[bool] = None):
         self.cfg = cfg
         self.s = cfg.semisfl
         self.model = build_model(cfg)
@@ -151,6 +153,14 @@ class SemiSFLSystem:
                     f"n_clients_per_round={self.n_active} must divide over "
                     f"the mesh's {self._n_shards} data-axis shards "
                     f"({self._data_axes})")
+        # async double-buffered prefetch (data/prefetch.py): a worker
+        # thread assembles the NEXT round's (K, B, ...) / (K, N, B, ...)
+        # stacks — and device_puts them — while this round's phase
+        # programs execute.  Opt-in (default OFF): the prefetcher takes
+        # exclusive ownership of the loader objects between rounds.
+        self.prefetch = prefetch_default() if prefetch is None else prefetch
+        self._prefetcher: Optional[RoundPrefetcher] = None
+        self._prefetch_key = None
         # host-side client-selection RNG: created once per run (init_state),
         # NOT per round — seeding from state.round both forced a device
         # sync every round and made every seed pick identical subsets.
@@ -256,6 +266,9 @@ class SemiSFLSystem:
 
         self.supervised_step = jax.jit(supervised_step)
         self.supervised_phase = scan_phase(supervised_step)
+        # raw (unjitted) step, for building phase variants with explicit
+        # scan policies (benchmarks/roofline.py scan-unroll micro-bench)
+        self._supervised_step_fn = supervised_step
 
         # --------------- cross-entity semi-supervised step ----------------
         # Carry: (client_bottoms, client_teacher_bottoms, top, proj,
@@ -527,6 +540,47 @@ class SemiSFLSystem:
     # ------------------------------------------------------------------
     # round driver
     # ------------------------------------------------------------------
+    def _ensure_prefetcher(self, labeled: Loader,
+                           client_loaders_: list[Loader]) -> RoundPrefetcher:
+        """The prefetcher is bound to specific loader OBJECTS (it owns
+        their streams between rounds); new loaders -> close the old
+        worker and rebind."""
+        key = (id(labeled), tuple(id(l) for l in client_loaders_))
+        if self._prefetcher is not None and key != self._prefetch_key:
+            self._prefetcher.close()
+            self._prefetcher = None
+        if self._prefetcher is None:
+            sharded = self._stack_shardings if self._use_sharded else None
+            self._prefetcher = RoundPrefetcher(
+                labeled, client_loaders_, k_u=self.s.k_u,
+                n_active=self.n_active,
+                sup_put=lambda xs, ys: (jnp.asarray(xs), jnp.asarray(ys)),
+                cli_put=None if sharded else jnp.asarray,
+                cli_shardings=sharded)
+            self._prefetch_key = key
+        return self._prefetcher
+
+    def prefetch_stats(self) -> Optional[dict]:
+        """Live prefetcher counters (None before the first prefetched
+        round); see ``RoundPrefetcher.stats``."""
+        return self._prefetcher.stats() if self._prefetcher else None
+
+    def close(self) -> None:
+        """Shut down the prefetch worker (if any), rolling its
+        speculative draws back so the loaders resume exactly where the
+        synchronous path would.  Idempotent; the system stays usable
+        (the next prefetched round rebinds a fresh worker)."""
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+            self._prefetcher = None
+            self._prefetch_key = None
+
+    def __del__(self):  # pragma: no cover
+        try:
+            self.close()
+        except Exception:
+            pass
+
     def broadcast(self, state: SemiSFLState):
         """Step (2): replicate global + teacher bottoms to active clients."""
         stack = lambda t: jnp.broadcast_to(
@@ -558,13 +612,34 @@ class SemiSFLSystem:
         per run (``init_state`` seeds it; ``rng_np`` overrides it) — never
         from ``state.round``, which would force a device sync per round.
         ``active`` remains the fixed-subset escape hatch for parity
-        tests."""
+        tests.
+
+        With ``prefetch=`` / ``REPRO_PREFETCH`` on, the phase drivers
+        consume ready device buffers from a background worker
+        (``data/prefetch.py``) instead of calling the loaders inline, and
+        the worker starts assembling the NEXT round's stacks before this
+        round's metrics are synced — identical sample streams (the worker
+        draws from the same loaders, rolling back on a K_s adaptation or
+        a pinned ``active=`` mismatch), overlapped host/device time."""
         k_s, k_u = controller.k_s, self.s.k_u
+        pf = (self._ensure_prefetcher(labeled, client_loaders_)
+              if self.prefetch else None)
 
         # (1) supervised phase.  The LR schedule runs off the cumulative
         # step counter carried in the state — NOT round * (k_s_init + k_u),
         # which skips steps once Eq. (10) shrinks K_s.
-        if self.scan_rounds:
+        if pf is not None:
+            xs_d, ys_d = pf.get_supervised(k_s)   # already on device
+            if self.scan_rounds:
+                state, losses_s = self.supervised_phase(state, (xs_d, ys_d))
+                f_s_acc = losses_s    # sync deferred past speculate()
+            else:
+                f_s_acc = []
+                for i in range(k_s):
+                    state, loss = self.supervised_step(
+                        state, (xs_d[i], ys_d[i]))
+                    f_s_acc.append(float(loss))
+        elif self.scan_rounds:
             xs, ys = labeled.next_many(k_s)
             state, losses_s = self.supervised_phase(
                 state, (jnp.asarray(xs), jnp.asarray(ys)))
@@ -599,6 +674,21 @@ class SemiSFLSystem:
                  state.step)
         if k_u == 0:
             f_u_acc, mask_acc = np.zeros((0,)), np.zeros((0,))
+        elif pf is not None:
+            xus = pf.get_clients(active, k_u)     # already on device/shards
+            if self._use_sharded:
+                carry, (losses_u, _h, masks) = self.semi_phase_sharded(
+                    carry, xus)
+            elif self.scan_rounds:
+                carry, (losses_u, _h, masks) = self.semi_phase(carry, xus)
+            else:
+                losses_u, masks = [], []
+                for i in range(k_u):
+                    carry, (loss, _h, mask_rate) = self.semi_step(
+                        carry, xus[i])
+                    losses_u.append(float(loss))
+                    masks.append(float(mask_rate))
+            f_u_acc, mask_acc = losses_u, masks   # sync deferred
         elif self._use_sharded:
             xus, _ = stack_client_batches_many(
                 client_loaders_, active, k_u,
@@ -619,6 +709,11 @@ class SemiSFLSystem:
                     carry, jnp.asarray(xu))
                 f_u_acc.append(float(loss))
                 mask_acc.append(float(mask_rate))
+        if pf is not None:
+            # both phases are dispatched (scanned modes: not yet synced):
+            # start assembling the NEXT round's stacks now, so the worker
+            # runs while this round executes and while metrics sync below.
+            pf.speculate(k_s, selection_rng(self, rng_np))
         (bottoms, t_bottoms, top, proj, teacher, queue, rng, step) = carry
 
         # (5) aggregate — the global bottom AND the teacher bottom: the
@@ -635,6 +730,11 @@ class SemiSFLSystem:
         state = SemiSFLState(params, teacher, state.opt, queue, rng,
                              state.round + 1, step)
 
+        # metric sync point: np.asarray first so the deferred prefetch-path
+        # device arrays reduce with numpy's host reduction order (bit-equal
+        # to the synchronous path), not jnp's on-device .mean()
+        f_s_acc, mask_acc = np.asarray(f_s_acc), np.asarray(mask_acc)
+        f_u_acc = np.asarray(f_u_acc)
         f_s = float(np.mean(f_s_acc)) if len(f_s_acc) else 0.0
         f_u = float(np.mean(f_u_acc)) if len(f_u_acc) else 0.0
         controller.update(f_s, f_u)

@@ -5,6 +5,8 @@ from repro.data.partition import (dirichlet_partition, partition_stats,
 from repro.data.pipeline import (Loader, client_loaders,
                                  stack_client_batches,
                                  stack_client_batches_many)
+from repro.data.prefetch import (Prefetcher, PrefetchError, RoundPrefetcher,
+                                 prefetch_default)
 from repro.data.synthetic import (Dataset, make_image_dataset,
                                   make_lm_dataset, train_test_split)
 
@@ -13,5 +15,6 @@ __all__ = [
     "dirichlet_partition", "partition_stats", "uniform_partition",
     "Loader", "client_loaders", "stack_client_batches",
     "stack_client_batches_many",
+    "Prefetcher", "PrefetchError", "RoundPrefetcher", "prefetch_default",
     "Dataset", "make_image_dataset", "make_lm_dataset", "train_test_split",
 ]

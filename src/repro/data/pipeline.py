@@ -3,8 +3,19 @@
 Numpy-side sampling (cheap, CPU) feeding jnp arrays to jitted steps.  Each
 loader is an infinite sampler with its own RandomState so experiments are
 reproducible per seed.
+
+Loaders implement a *restartable iterator protocol* —
+:meth:`Loader.state_dict` / :meth:`Loader.load_state_dict` /
+:meth:`Loader.clone` capture and restore the full sampling state (RNG +
+current permutation + cursor).  The async prefetch worker
+(``repro.data.prefetch``) relies on it: speculative draws for the next
+round are rolled back when the engine's actual request differs (a K_s
+adaptation round), so the prefetched and synchronous executors consume
+bit-identical sample streams.
 """
 from __future__ import annotations
+
+import copy
 
 import numpy as np
 
@@ -12,12 +23,24 @@ from repro.data.synthetic import Dataset
 
 
 class Loader:
-    """Infinite shuffled batch sampler over a (subset of a) dataset."""
+    """Infinite shuffled batch sampler over a (subset of a) dataset.
+
+    Epoch semantics: samples are drawn from a seeded permutation of the
+    index set; a batch that reaches the end of the permutation *finishes
+    the epoch* and continues into a fresh permutation — no sample is
+    dropped or repeated mid-epoch, whatever the partition size modulo
+    batch (partitions smaller than a batch simply span several epochs per
+    batch).  Every loader therefore wraps at exactly ``len(self)`` draws,
+    so ragged client partitions recycle their samples at deterministic,
+    per-loader epoch boundaries instead of drifting with the batch size.
+    """
 
     def __init__(self, ds: Dataset, indices: np.ndarray | None, batch: int,
                  seed: int):
         self.ds = ds
         self.idx = np.arange(len(ds.y)) if indices is None else np.asarray(indices)
+        if len(self.idx) == 0:
+            raise ValueError("Loader needs a non-empty index set")
         self.batch = batch
         self.rng = np.random.RandomState(seed)
         self._order = self.rng.permutation(self.idx)
@@ -26,18 +49,44 @@ class Loader:
     def __len__(self):
         return len(self.idx)
 
+    # -- restartable iterator protocol ---------------------------------
+    def state_dict(self) -> dict:
+        """Full sampling state; restoring it replays the exact stream."""
+        return {"rng": self.rng.get_state(), "order": self._order.copy(),
+                "cursor": self._cursor}
+
+    def load_state_dict(self, sd: dict) -> None:
+        self.rng.set_state(sd["rng"])
+        self._order = sd["order"].copy()
+        self._cursor = sd["cursor"]
+
+    def clone(self) -> "Loader":
+        """Independent loader continuing this one's exact stream (shares
+        the dataset arrays, deep-copies the sampling state)."""
+        other = copy.copy(self)
+        other.rng = np.random.RandomState()
+        other.load_state_dict(self.state_dict())
+        return other
+
+    # -- sampling ------------------------------------------------------
+    def _take(self, n: int) -> np.ndarray:
+        take = np.empty(n, dtype=self.idx.dtype)
+        filled = 0
+        while filled < n:
+            avail = len(self._order) - self._cursor
+            if avail == 0:
+                self._order = self.rng.permutation(self.idx)
+                self._cursor = 0
+                avail = len(self._order)
+            m = min(n - filled, avail)
+            take[filled: filled + m] = \
+                self._order[self._cursor: self._cursor + m]
+            self._cursor += m
+            filled += m
+        return take
+
     def next(self) -> tuple[np.ndarray, np.ndarray]:
-        if len(self.idx) < self.batch:
-            # tiny client (extreme Dirichlet skew): sample with replacement
-            # so client batches stack to a fixed shape
-            take = self.rng.choice(self.idx, size=self.batch, replace=True)
-            return self.ds.x[take], self.ds.y[take]
-        b = self.batch
-        if self._cursor + b > len(self._order):
-            self._order = self.rng.permutation(self.idx)
-            self._cursor = 0
-        take = self._order[self._cursor: self._cursor + b]
-        self._cursor += b
+        take = self._take(self.batch)
         return self.ds.x[take], self.ds.y[take]
 
     def next_many(self, k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -65,7 +114,11 @@ def stack_client_batches_many(loaders: list[Loader], active: list[int],
                               ) -> tuple[np.ndarray, np.ndarray]:
     """Prefetch ``k`` rounds of client batches -> ``(K, N, B, ...)`` stacks
     for the scanned cross-entity phase.  Iteration-major draw order matches
-    ``k`` successive :func:`stack_client_batches` calls exactly.
+    ``k`` successive :func:`stack_client_batches` calls exactly, and each
+    client's ``(K, B, ...)`` slab wraps its partition at the loader's own
+    deterministic epoch boundary (see :class:`Loader`) — a client whose
+    partition is smaller than ``k * batch`` recycles samples at exactly
+    ``len(loader)`` draws, in phase with the eager path.
 
     With ``shardings=(x_sharding, y_sharding)`` (NamedShardings whose spec
     puts the client axis on the mesh's data axes) the stacks are

@@ -413,6 +413,44 @@ def make_scanned_train_phase(plan: StepPlan, dist: DistContext,
                       donate_carry=donate_carry)
 
 
+def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
+                                lr: float = 0.02, *,
+                                donate_carry: bool = True,
+                                depth: int = 2) -> Callable:
+    """:func:`make_scanned_train_phase` driven through the async prefetch
+    pipeline (``repro.data.prefetch.Prefetcher``): the returned
+    ``run(state, batch_thunks)`` consumes an iterable of zero-arg host
+    batch builders — each returning one phase's stacked ``(K, N, B, ...)``
+    pytree — and overlaps building + device transfer of phase ``k+1``
+    with phase ``k``'s execution on a background worker.  Returns
+    ``(final_state, [stacked_metrics_per_phase])``; the worker is joined
+    before returning (also on error)."""
+    from repro.data.prefetch import Prefetcher
+
+    phase = make_scanned_train_phase(plan, dist, lr,
+                                     donate_carry=donate_carry)
+
+    def run(state, batch_thunks):
+        thunks = list(batch_thunks)
+        put = lambda thunk: (lambda: jax.tree.map(jnp.asarray, thunk()))
+        pf = Prefetcher(depth=depth)
+        metrics = []
+        try:
+            if thunks:
+                pf.submit("batch0", put(thunks[0]))
+            for i in range(len(thunks)):
+                if i + 1 < len(thunks):
+                    pf.submit(f"batch{i + 1}", put(thunks[i + 1]))
+                _, batches = pf.get()
+                state, ms = phase(state, batches)
+                metrics.append(ms)
+        finally:
+            pf.close()
+        return state, metrics
+
+    return run
+
+
 def make_prefill_step(plan: StepPlan, dist: DistContext) -> Callable:
     cfg = plan.cfg
     model = build_model(cfg)

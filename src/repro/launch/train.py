@@ -34,7 +34,8 @@ def build_system(name: str, cfg, **kw):
     if name == "fedswitch-sl":
         return make_fedswitch_sl(cfg, **kw)
     kw.pop("mesh", None)                 # full-model baselines: no split,
-    return BASELINES[name](cfg, **kw)    # no client-sharded executor
+    kw.pop("prefetch", None)             # no sharded executor, no phase
+    return BASELINES[name](cfg, **kw)    # stacks to prefetch
 
 
 def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
@@ -43,7 +44,8 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
                  n_active: int = 5, dirichlet: float = 0.0,
                  labeled_batch: int = 32, client_batch: int = 16,
                  seed: int = 0, smoke: bool = True, eval_every: int = 5,
-                 k_s: int = 15, k_u: int = 4, mesh=None, log=print):
+                 k_s: int = 15, k_u: int = 4, mesh=None,
+                 prefetch: bool | None = None, log=print):
     from dataclasses import replace
     cfg = smoke_config(arch) if smoke else get_config(arch)
     cfg = replace(cfg, semisfl=replace(
@@ -65,8 +67,12 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
         parts = [unl_idx[p] for p in
                  uniform_partition(seed, len(unl_idx), n_clients)]
 
+    kw = {} if prefetch is None else {"prefetch": prefetch}
+    if prefetch and baseline not in ("semisfl", "fedswitch-sl"):
+        raise SystemExit("--prefetch drives the SemiSFL round executors; "
+                         "full-model baselines have no phase stacks")
     sys_ = build_system(baseline, cfg, n_clients_per_round=n_active,
-                        mesh=mesh)
+                        mesh=mesh, **kw)
     state = sys_.init_state(seed)
     ctrl = make_controller(cfg, n_labeled, len(train.y))
     lab = Loader(train, lab_idx, labeled_batch, seed)
@@ -94,6 +100,13 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
         log(f"[{baseline}] round {r}: " + " ".join(
             f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
             for k, v in rec.items() if k != "round"))
+    if getattr(sys_, "prefetch", False):
+        stats = sys_.prefetch_stats()
+        if stats:
+            log(f"[{baseline}] prefetch: {stats['rounds']} rounds, "
+                f"{stats['cancels']} cancels, "
+                f"overlap={stats['overlap_frac']:.2f}")
+        sys_.close()          # join the worker; the system stays usable
     return state, history, sys_
 
 
@@ -115,6 +128,11 @@ def main() -> None:
                          "this host's devices (see README; the mesh's "
                          "data axis is sized to the largest device count "
                          "that divides --active)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="assemble + device_put each round's batch stacks "
+                         "on a background worker, overlapped with the "
+                         "previous round's device execution (README: "
+                         "'Async double-buffered prefetch')")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -126,7 +144,8 @@ def main() -> None:
         arch=args.arch, baseline=args.baseline, rounds=args.rounds,
         n_labeled=args.labeled, n_total=args.total, n_clients=args.clients,
         n_active=args.active, dirichlet=args.dirichlet, seed=args.seed,
-        smoke=not args.full_config, mesh=mesh)
+        smoke=not args.full_config, mesh=mesh,
+        prefetch=True if args.prefetch else None)
     if args.ckpt:
         save_state(args.ckpt, state.params,
                    {"history": history, "arch": args.arch,

@@ -14,6 +14,15 @@ def pytest_configure(config):
 
 
 def pytest_collection_modifyitems(config, items):
+    # Per-test wall-clock cap via pytest-timeout (CI installs it; locally
+    # optional): a deadlocked prefetch worker or a hung 8-device
+    # subprocess job fails fast instead of stalling the whole run.  The
+    # in-test subprocess timeouts are tighter (<= 600s), so 900s only
+    # fires when something is truly wedged.
+    if config.pluginmanager.hasplugin("timeout"):
+        for item in items:
+            if item.get_closest_marker("timeout") is None:
+                item.add_marker(pytest.mark.timeout(900))
     if not any(item.get_closest_marker("tpu") for item in items):
         return
     from repro.compat import is_tpu

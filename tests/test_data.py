@@ -80,6 +80,96 @@ def test_loader_cycles_without_repeat_within_epoch():
     assert sum(len(s) for s in seen) == 32
 
 
+def _identity_dataset(n: int):
+    """y == sample index, so drawn labels reveal the index stream."""
+    from repro.data.synthetic import Dataset
+    x = np.zeros((n, 1, 1, 3), np.float32)
+    return Dataset(x=x, y=np.arange(n, dtype=np.int64))
+
+
+@given(st.integers(1, 37), st.integers(1, 16), st.integers(1, 12))
+def test_loader_epoch_boundary_contract(n, batch, k):
+    """The contract the prefetch worker's restartable iterators rely on
+    (ISSUE 4): over random (dataset size, batch, k) —
+
+      * the concatenated draw stream splits into exact epochs: every
+        window of ``n`` consecutive draws starting at a multiple of ``n``
+        is a permutation of the index set (wraparound never repeats or
+        drops a sample mid-epoch, whatever ``n % batch`` is);
+      * the stream is reproducible from the seed;
+      * ``next_many(k)`` equals ``k`` successive ``next()`` calls from an
+        equal-state loader (``clone``), and advances the state
+        identically.
+    """
+    ds = _identity_dataset(n)
+    seed = n * 1000 + batch * 10 + k
+    ld = Loader(ds, None, batch=batch, seed=seed)
+
+    draws = max(3, (3 * n) // batch + 2)        # >= 3 full epochs
+    stream = np.concatenate([ld.next()[1] for _ in range(draws)])
+    n_epochs = len(stream) // n
+    assert n_epochs >= 3
+    for e in range(n_epochs):
+        epoch = stream[e * n:(e + 1) * n]
+        assert np.array_equal(np.sort(epoch), np.arange(n)), (
+            f"epoch {e} is not a permutation: {epoch}")
+
+    # reproducible from seed
+    ld2 = Loader(ds, None, batch=batch, seed=seed)
+    stream2 = np.concatenate([ld2.next()[1] for _ in range(draws)])
+    assert np.array_equal(stream, stream2)
+
+    # next_many(k) == k x next(), from the same state, to the same state
+    a, b = Loader(ds, None, batch=batch, seed=seed), None
+    b = a.clone()
+    _, many_y = a.next_many(k)
+    seq_y = np.stack([b.next()[1] for _ in range(k)])
+    assert np.array_equal(many_y, seq_y)
+    assert np.array_equal(a.next()[1], b.next()[1])   # states converged
+
+
+def test_loader_state_dict_roundtrip_restarts_stream():
+    ds = _identity_dataset(23)
+    ld = Loader(ds, None, batch=5, seed=3)
+    ld.next()
+    snap = ld.state_dict()
+    ahead = [ld.next()[1] for _ in range(6)]    # crosses an epoch boundary
+    ld.load_state_dict(snap)
+    replay = [ld.next()[1] for _ in range(6)]
+    assert all(np.array_equal(a, b) for a, b in zip(ahead, replay))
+
+
+def test_ragged_partitions_wrap_at_their_own_epoch_boundary():
+    """Regression (ISSUE 4): a client whose partition is smaller than
+    ``k * batch`` must recycle its samples at exactly ``len(partition)``
+    draws — not at a batch-size-dependent point out of phase with its
+    peers — and ``stack_client_batches_many`` must equal ``k`` eager
+    ``stack_client_batches`` calls on ragged partitions too."""
+    from repro.data import client_loaders, stack_client_batches
+    from repro.data.pipeline import stack_client_batches_many
+
+    ds = _identity_dataset(40)
+    # ragged: 5, 7, and 13 samples with batch 4 (none divides), k*batch=24
+    parts = [np.arange(0, 5), np.arange(5, 12), np.arange(12, 25)]
+    k, batch = 6, 4
+
+    many = stack_client_batches_many(
+        client_loaders(ds, parts, batch, seed=9), list(range(3)), k)[1]
+    eager_loaders = client_loaders(ds, parts, batch, seed=9)
+    eager = np.stack([stack_client_batches(eager_loaders, [0, 1, 2])[1]
+                      for _ in range(k)])
+    assert np.array_equal(many, eager)
+
+    # per-client stream: iteration-major (K, N, B) -> client-major (N, K*B)
+    streams = many.transpose(1, 0, 2).reshape(3, k * batch)
+    for ci, part in enumerate(parts):
+        s = streams[ci]
+        for e in range(len(s) // len(part)):
+            epoch = s[e * len(part):(e + 1) * len(part)]
+            assert np.array_equal(np.sort(epoch), part), (
+                f"client {ci} epoch {e} recycled out of phase: {epoch}")
+
+
 def test_lm_dataset_classes_have_distinct_statistics():
     ds = make_lm_dataset(0, vocab=32, n=64, seq_len=32, num_classes=2)
     h0 = np.bincount(ds.x[ds.y == 0].ravel(), minlength=32)
