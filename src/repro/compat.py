@@ -37,8 +37,8 @@ import jax
 __all__ = [
     "AxisType", "HAS_PALLAS", "HAS_PALLAS_TPU", "axis_index",
     "cost_analysis", "default_backend", "is_tpu", "jax_version", "make_mesh",
-    "pallas_compiler_params", "pl", "pltpu", "resolve_shard_map",
-    "shard_map", "supports_axis_types", "use_mesh",
+    "make_mesh_exact", "pallas_compiler_params", "pl", "pltpu",
+    "resolve_shard_map", "shard_map", "supports_axis_types", "use_mesh",
 ]
 
 
@@ -80,6 +80,20 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None,
     if axis_types is not None and supports_axis_types(make):
         kwargs["axis_types"] = axis_types
     return make(axis_shapes, axis_names, **kwargs)
+
+
+def make_mesh_exact(device_grid, axis_names):
+    """``jax.sharding.Mesh`` with the EXACT device order of ``device_grid``
+    (an ndarray of devices already shaped like the mesh).
+
+    ``jax.make_mesh`` may permute devices for ring-efficient collectives;
+    multi-pod meshes must NOT be permuted — the pod axis has to stay the
+    process axis or a pod's shards land behind another process's memory.
+    ``axis_types`` is deliberately not taken: its constructor format
+    drifted (0.4.x dict vs current tuple) and the default — every axis
+    Auto — is the only thing this repo uses."""
+    from jax.sharding import Mesh
+    return Mesh(device_grid, axis_names)
 
 
 # ---------------------------------------------------------------------------

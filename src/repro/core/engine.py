@@ -49,7 +49,8 @@ from repro.core.scan import scan_phase, sharded_scan_phase
 from repro.core.split import (apply_projection_head, init_projection_head,
                               pool_features)
 from repro.data.augment import strong_augment, weak_augment
-from repro.data.pipeline import (Loader, stack_client_batches,
+from repro.data.pipeline import (Loader, PodClients, select_pod_blocked,
+                                 stack_client_batches,
                                  stack_client_batches_many)
 from repro.data.prefetch import RoundPrefetcher, prefetch_default
 from repro.kernels import clustering_loss as fused_clustering_loss
@@ -67,6 +68,21 @@ def _scan_rounds_default() -> bool:
 def _shard_clients_default() -> bool:
     return os.environ.get("REPRO_SHARD_CLIENTS", "1").lower() not in (
         "0", "false", "off")
+
+
+def _host(x) -> np.ndarray:
+    """Host value of a metric output.  Multi-process program outputs span
+    devices this process cannot address; they are replicated by the
+    executors' pinned out-specs, so the local copy IS the value — every
+    process reads the same bytes, keeping the Eq. (10) controller and the
+    selection RNG in lockstep.  The multi-process read delegates to
+    ``distributed.fetch``, which refuses a non-replicated output loudly
+    (a local slice would silently desynchronize the fleet's
+    controllers)."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        from repro.launch.distributed import fetch
+        return fetch(x)
+    return np.asarray(x)
 
 
 def selection_rng(holder, rng_np: Optional[np.random.RandomState]
@@ -153,6 +169,23 @@ class SemiSFLSystem:
                     f"n_clients_per_round={self.n_active} must divide over "
                     f"the mesh's {self._n_shards} data-axis shards "
                     f"({self._data_axes})")
+        # multi-process (multi-pod) topology: one process per pod row of
+        # the mesh.  Everything the executors need beyond the
+        # single-process sharded path is (a) per-pod input assembly
+        # (launch/distributed.py) and (b) pod-blocked client selection so
+        # no sample ever crosses a pod boundary; both are driven off
+        # self._procs / self._pod below.
+        self._procs = jax.process_count()
+        self._pod = 0
+        if self._procs > 1:
+            if not self._use_sharded:
+                raise RuntimeError(
+                    "multi-process execution requires the client-sharded "
+                    "scan executor: pass mesh=make_host_mesh(pods="
+                    "jax.process_count()) and leave REPRO_SCAN_ROUNDS / "
+                    "REPRO_SHARD_CLIENTS on")
+            from repro.launch.distributed import pod_index
+            self._pod = pod_index(mesh)   # validates pod axis == processes
         # async double-buffered prefetch (data/prefetch.py): a worker
         # thread assembles the NEXT round's (K, B, ...) / (K, N, B, ...)
         # stacks — and device_puts them — while this round's phase
@@ -165,6 +198,10 @@ class SemiSFLSystem:
         # NOT per round — seeding from state.round both forced a device
         # sync every round and made every seed pick identical subsets.
         self._select_rng: Optional[np.random.RandomState] = None
+        # device placement of the supervised (K, B, ...) stacks; the
+        # multi-process sharded executor overrides this with an explicit
+        # replicated put in _build_sharded_exec
+        self._sup_put = lambda xs, ys: (jnp.asarray(xs), jnp.asarray(ys))
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -175,7 +212,7 @@ class SemiSFLSystem:
         params = {"bottom": mp["bottom"], "top": mp["top"],
                   "proj": init_projection_head(k2, self.cfg)}
         self._select_rng = np.random.RandomState(seed)
-        return SemiSFLState(
+        state = SemiSFLState(
             params=params,
             teacher=jax.tree.map(jnp.copy, params),
             opt=self.opt.init(params),
@@ -184,6 +221,13 @@ class SemiSFLSystem:
             round=jnp.zeros((), jnp.int32),
             step=jnp.zeros((), jnp.int32),
         )
+        if self._procs > 1:
+            # every process built the same values from the same seed;
+            # commit them replicated over the global mesh so the phase
+            # programs see consistently-placed global inputs from round 0
+            from repro.launch.distributed import put_replicated
+            state = put_replicated(state, self.mesh)
+        return state
 
     def _proj_dim(self):
         if self.s.proj_head == "none":
@@ -513,6 +557,29 @@ class SemiSFLSystem:
         self._stack_shardings = (
             NamedSharding(mesh, client_batch_pspec(6, axes, client_dim=1)),
             None)
+        if self._procs > 1:
+            # per-pod assembly: this process stacks ONLY its own clients'
+            # (K, n_local, B, ...) slab and contributes it to the global
+            # stack via jax.make_array_from_process_local_data — no host
+            # materializes another pod's samples.  Replicated inputs
+            # (supervised stacks) are placed per-process with identical
+            # values instead of one host broadcasting.
+            from repro.launch.distributed import make_pod_array
+            x_sh, n_act = self._stack_shardings[0], self.n_active
+
+            def pod_stack_put(local):
+                gshape = (local.shape[0], n_act) + tuple(local.shape[2:])
+                return make_pod_array(x_sh, local, gshape)
+
+            self._stack_shardings = (pod_stack_put, None)
+            # collective-free replicated placement: this runs on the
+            # prefetch WORKER thread, where a hidden collective (which
+            # device_put to a non-addressable sharding performs) would
+            # interleave the fleet's Gloo streams with the main thread's
+            # phase programs — see distributed.put_replicated
+            from repro.launch.distributed import put_replicated
+            self._sup_put = lambda xs, ys: tuple(
+                put_replicated((np.asarray(xs), np.asarray(ys)), mesh))
 
         stacked_sh = tree_shardings(mesh, leading_axis_pspecs(abs_stack,
                                                               axes))
@@ -541,22 +608,40 @@ class SemiSFLSystem:
     # round driver
     # ------------------------------------------------------------------
     def _ensure_prefetcher(self, labeled: Loader,
-                           client_loaders_: list[Loader]) -> RoundPrefetcher:
+                           client_loaders_: list[Loader],
+                           pc: Optional[PodClients] = None
+                           ) -> RoundPrefetcher:
         """The prefetcher is bound to specific loader OBJECTS (it owns
         their streams between rounds); new loaders -> close the old
-        worker and rebind."""
-        key = (id(labeled), tuple(id(l) for l in client_loaders_))
+        worker and rebind.  With a :class:`PodClients` view the worker
+        speculates with the pod-blocked selection policy restricted to
+        this process's loaders — one prefetch worker per pod, each
+        confined to its own client subset (the rollback protocol already
+        guarantees a worker touches only its own loaders)."""
+        # the binding key carries the selection POLICY too: the same
+        # loader objects under a different pod view must not reuse a
+        # worker whose speculation draws with the old policy (every
+        # round would mispredict, silently degrading to inline builds)
+        policy = (None if pc is None
+                  else (pc.n_clients, pc.n_pods, pc.pod))
+        key = (id(labeled), tuple(id(l) for l in client_loaders_), policy)
         if self._prefetcher is not None and key != self._prefetch_key:
             self._prefetcher.close()
             self._prefetcher = None
         if self._prefetcher is None:
             sharded = self._stack_shardings if self._use_sharded else None
+            select_fn = None
+            if pc is not None:
+                n_act = self.n_active
+                select_fn = lambda rng: pc.local_indices(
+                    select_pod_blocked(rng, pc.blocks, n_act))
             self._prefetcher = RoundPrefetcher(
                 labeled, client_loaders_, k_u=self.s.k_u,
                 n_active=self.n_active,
-                sup_put=lambda xs, ys: (jnp.asarray(xs), jnp.asarray(ys)),
+                sup_put=self._sup_put,
                 cli_put=None if sharded else jnp.asarray,
-                cli_shardings=sharded)
+                cli_shardings=sharded,
+                select_fn=select_fn)
             self._prefetch_key = key
         return self._prefetcher
 
@@ -614,6 +699,15 @@ class SemiSFLSystem:
         ``active`` remains the fixed-subset escape hatch for parity
         tests.
 
+        ``client_loaders_`` may be a :class:`PodClients` view instead of
+        a plain list: selection switches to the pod-blocked policy
+        (:func:`select_pod_blocked` — every process draws the same global
+        list, each pod's clients staying inside its block) and only the
+        view's own loaders are ever touched.  Multi-process execution
+        REQUIRES the view (a plain list cannot express which clients this
+        process owns); single-process runs may use it to reproduce the
+        multi-process sample streams exactly.
+
         With ``prefetch=`` / ``REPRO_PREFETCH`` on, the phase drivers
         consume ready device buffers from a background worker
         (``data/prefetch.py``) instead of calling the loaders inline, and
@@ -622,7 +716,40 @@ class SemiSFLSystem:
         draws from the same loaders, rolling back on a K_s adaptation or
         a pinned ``active=`` mismatch), overlapped host/device time."""
         k_s, k_u = controller.k_s, self.s.k_u
-        pf = (self._ensure_prefetcher(labeled, client_loaders_)
+        pc: Optional[PodClients] = None
+        if isinstance(client_loaders_, PodClients):
+            pc = client_loaders_
+            client_loaders_ = pc.loaders
+        if self._procs > 1 and pc is None:
+            raise ValueError(
+                "multi-process run_round needs a PodClients view of the "
+                "client loaders (per-pod loading; see "
+                "data.pipeline.make_pod_clients)")
+        if pc is not None and self._procs == 1 and pc.pod is not None:
+            # a partial view cannot feed a one-process executor: the
+            # global stack needs every pod's samples, and this process
+            # only holds one block's loaders
+            raise ValueError(
+                f"PodClients holds only pod {pc.pod}'s loaders but this "
+                "run is single-process; use the pod=None view (all "
+                "loaders, pod-blocked selection) to reproduce the "
+                "multi-process streams on one host")
+        if pc is not None and self._procs > 1:
+            if pc.n_pods != self._procs:
+                raise ValueError(
+                    f"PodClients was built for {pc.n_pods} pods but the "
+                    f"fleet has {self._procs} processes; one pod per "
+                    "process is required "
+                    "(make_pod_clients(n_pods=jax.process_count()))")
+            if pc.pod != self._pod:
+                # a wrong-pod view passes every structural check but
+                # would feed ANOTHER pod's samples into this pod's shard
+                # of the global stack — silently mistraining
+                raise ValueError(
+                    f"PodClients holds pod {pc.pod}'s loaders but this "
+                    f"process is pod {self._pod}; build the view with "
+                    "pod=jax.process_index()")
+        pf = (self._ensure_prefetcher(labeled, client_loaders_, pc)
               if self.prefetch else None)
 
         # (1) supervised phase.  The LR schedule runs off the cumulative
@@ -641,9 +768,9 @@ class SemiSFLSystem:
                     f_s_acc.append(float(loss))
         elif self.scan_rounds:
             xs, ys = labeled.next_many(k_s)
-            state, losses_s = self.supervised_phase(
-                state, (jnp.asarray(xs), jnp.asarray(ys)))
-            f_s_acc = np.asarray(losses_s)        # one host sync per phase
+            state, losses_s = self.supervised_phase(state,
+                                                    self._sup_put(xs, ys))
+            f_s_acc = _host(losses_s)             # one host sync per phase
         else:
             f_s_acc = []
             for _ in range(k_s):
@@ -654,15 +781,35 @@ class SemiSFLSystem:
 
         # (2) broadcast
         if active is None:
-            active = list(selection_rng(self, rng_np).choice(
-                len(client_loaders_),
-                size=min(self.n_active, len(client_loaders_)),
-                replace=False))
+            if pc is not None:
+                active = pc.select(selection_rng(self, rng_np),
+                                   self.n_active)
+            else:
+                active = list(selection_rng(self, rng_np).choice(
+                    len(client_loaders_),
+                    size=min(self.n_active, len(client_loaders_)),
+                    replace=False))
         if self._use_sharded:
             if len(active) != self.n_active:
                 raise ValueError(
                     f"sharded executor needs exactly n_clients_per_round="
                     f"{self.n_active} active clients, got {len(active)}")
+        stack_active = active
+        if pc is not None and self._procs > 1:
+            # active position j lands on pod j // per; its client must be
+            # one this pod owns or the data cannot be assembled locally.
+            # (The length check above already ran — multi-process implies
+            # the sharded executor — so j // per stays in range.)
+            per = self.n_active // pc.n_pods
+            for j, a in enumerate(active):
+                if a not in pc.blocks[j // per]:
+                    raise ValueError(
+                        f"active[{j}]={a} is outside pod {j // per}'s "
+                        f"client block {pc.blocks[j // per]}; multi-process "
+                        "rounds need a pod-blocked active list "
+                        "(select_pod_blocked)")
+            stack_active = pc.local_indices(active)
+        if self._use_sharded:
             bottoms, t_bottoms = self._broadcast_sharded(
                 state.params["bottom"], state.teacher["bottom"])
         else:
@@ -675,7 +822,7 @@ class SemiSFLSystem:
         if k_u == 0:
             f_u_acc, mask_acc = np.zeros((0,)), np.zeros((0,))
         elif pf is not None:
-            xus = pf.get_clients(active, k_u)     # already on device/shards
+            xus = pf.get_clients(stack_active, k_u)  # on device/shards
             if self._use_sharded:
                 carry, (losses_u, _h, masks) = self.semi_phase_sharded(
                     carry, xus)
@@ -691,20 +838,21 @@ class SemiSFLSystem:
             f_u_acc, mask_acc = losses_u, masks   # sync deferred
         elif self._use_sharded:
             xus, _ = stack_client_batches_many(
-                client_loaders_, active, k_u,
+                client_loaders_, stack_active, k_u,
                 shardings=self._stack_shardings)
             carry, (losses_u, _h, masks) = self.semi_phase_sharded(
                 carry, xus)
-            f_u_acc, mask_acc = np.asarray(losses_u), np.asarray(masks)
+            f_u_acc, mask_acc = _host(losses_u), _host(masks)
         elif self.scan_rounds:
-            xus, _ = stack_client_batches_many(client_loaders_, active, k_u)
+            xus, _ = stack_client_batches_many(client_loaders_,
+                                               stack_active, k_u)
             carry, (losses_u, _h, masks) = self.semi_phase(
                 carry, jnp.asarray(xus))
             f_u_acc, mask_acc = np.asarray(losses_u), np.asarray(masks)
         else:
             f_u_acc, mask_acc = [], []
             for _ in range(k_u):
-                xu, _ = stack_client_batches(client_loaders_, active)
+                xu, _ = stack_client_batches(client_loaders_, stack_active)
                 carry, (loss, _h, mask_rate) = self.semi_step(
                     carry, jnp.asarray(xu))
                 f_u_acc.append(float(loss))
@@ -730,11 +878,14 @@ class SemiSFLSystem:
         state = SemiSFLState(params, teacher, state.opt, queue, rng,
                              state.round + 1, step)
 
-        # metric sync point: np.asarray first so the deferred prefetch-path
+        # metric sync point: _host (np.asarray + the replicated-output
+        # read multi-process needs) first so the deferred prefetch-path
         # device arrays reduce with numpy's host reduction order (bit-equal
-        # to the synchronous path), not jnp's on-device .mean()
-        f_s_acc, mask_acc = np.asarray(f_s_acc), np.asarray(mask_acc)
-        f_u_acc = np.asarray(f_u_acc)
+        # to the synchronous path), not jnp's on-device .mean().  Every
+        # process syncs the same replicated values, so the controller —
+        # and with it the next round's K_s — stays in lockstep fleet-wide.
+        f_s_acc, mask_acc = _host(f_s_acc), _host(mask_acc)
+        f_u_acc = _host(f_u_acc)
         f_s = float(np.mean(f_s_acc)) if len(f_s_acc) else 0.0
         f_u = float(np.mean(f_u_acc)) if len(f_u_acc) else 0.0
         controller.update(f_s, f_u)
@@ -745,12 +896,19 @@ class SemiSFLSystem:
     def evaluate(self, state: SemiSFLState, test_x: np.ndarray,
                  test_y: np.ndarray, batch: int = 256,
                  use_teacher: bool = True) -> float:
+        """Test accuracy of the (teacher) model.  Multi-process: every
+        process evaluates the same replicated params on the same test
+        set (numpy inputs are consistent-by-construction across the
+        fleet) and reads the same replicated count back — no process is
+        special, so no broadcast is needed."""
         params = state.teacher if use_teacher else state.params
+        multi = self._procs > 1
         correct = 0.0
         for i in range(0, len(test_y), batch):
-            correct += float(self.eval_batch(
-                params, jnp.asarray(test_x[i: i + batch]),
-                jnp.asarray(test_y[i: i + batch])))
+            xb, yb = test_x[i: i + batch], test_y[i: i + batch]
+            if not multi:
+                xb, yb = jnp.asarray(xb), jnp.asarray(yb)
+            correct += float(_host(self.eval_batch(params, xb, yb)))
         return correct / len(test_y)
 
 

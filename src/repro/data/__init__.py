@@ -2,8 +2,9 @@ from repro.data.augment import (strong_augment, token_strong, token_weak,
                                 weak_augment)
 from repro.data.partition import (dirichlet_partition, partition_stats,
                                   uniform_partition)
-from repro.data.pipeline import (Loader, client_loaders,
-                                 stack_client_batches,
+from repro.data.pipeline import (Loader, PodClients, client_loaders,
+                                 make_pod_clients, pod_client_blocks,
+                                 select_pod_blocked, stack_client_batches,
                                  stack_client_batches_many)
 from repro.data.prefetch import (Prefetcher, PrefetchError, RoundPrefetcher,
                                  prefetch_default)
@@ -13,7 +14,8 @@ from repro.data.synthetic import (Dataset, make_image_dataset,
 __all__ = [
     "strong_augment", "token_strong", "token_weak", "weak_augment",
     "dirichlet_partition", "partition_stats", "uniform_partition",
-    "Loader", "client_loaders", "stack_client_batches",
+    "Loader", "PodClients", "client_loaders", "make_pod_clients",
+    "pod_client_blocks", "select_pod_blocked", "stack_client_batches",
     "stack_client_batches_many",
     "Prefetcher", "PrefetchError", "RoundPrefetcher", "prefetch_default",
     "Dataset", "make_image_dataset", "make_lm_dataset", "train_test_split",

@@ -99,8 +99,14 @@ class Loader:
 
 
 def client_loaders(ds: Dataset, parts: list[np.ndarray], batch: int,
-                   seed: int) -> list[Loader]:
-    return [Loader(ds, p, batch, seed + 31 * i) for i, p in enumerate(parts)]
+                   seed: int, *, only: "range | list[int] | None" = None
+                   ) -> list[Loader]:
+    """One loader per client partition.  ``only`` restricts construction
+    to those GLOBAL client ids (per-pod loading) while keeping every
+    loader's seed keyed by its global id — client ``i``'s sample stream
+    is identical whether it was built on one host or on its pod."""
+    ids = range(len(parts)) if only is None else only
+    return [Loader(ds, parts[i], batch, seed + 31 * i) for i in ids]
 
 
 def stack_client_batches(loaders: list[Loader], active: list[int]):
@@ -124,17 +130,128 @@ def stack_client_batches_many(loaders: list[Loader], active: list[int],
     puts the client axis on the mesh's data axes) the stacks are
     ``device_put`` directly onto the mesh, so each client's ``(K, B, ...)``
     slab lands on its shard and the sharded phase executor starts without
-    an extra host->replicated->resharded hop.  Either entry may be None to
-    skip that transfer (the cross-entity phase never consumes the labels,
-    so the engine passes ``(x_sharding, None)``)."""
+    an extra host->replicated->resharded hop.  Either entry may instead be
+    a *callable* ``stack -> device value`` — the multi-process engine
+    passes the per-pod assembler that turns this process's local
+    ``(K, n_local, B, ...)`` slab into the global client-sharded array
+    (``jax.make_array_from_process_local_data``).  Either entry may be
+    None to skip that transfer (the cross-entity phase never consumes the
+    labels, so the engine passes ``(x_sharding, None)``)."""
     xs, ys = zip(*(stack_client_batches(loaders, active) for _ in range(k)))
     xs, ys = np.stack(xs), np.stack(ys)
     if shardings is None:
         return xs, ys
-    import jax  # host-only module otherwise; keep the cheap-import property
+
+    def put(stack, sharding):
+        if sharding is None:
+            return stack
+        if callable(sharding):
+            return sharding(stack)
+        import jax  # host-only module otherwise; keep cheap-import
+        return jax.device_put(stack, sharding)
+
     x_sharding, y_sharding = shardings
-    if x_sharding is not None:
-        xs = jax.device_put(xs, x_sharding)
-    if y_sharding is not None:
-        ys = jax.device_put(ys, y_sharding)
-    return xs, ys
+    return put(xs, x_sharding), put(ys, y_sharding)
+
+
+# ---------------------------------------------------------------------------
+# per-pod client views (multi-process / multi-pod runtime)
+# ---------------------------------------------------------------------------
+
+def pod_client_blocks(n_clients: int, n_pods: int) -> list[range]:
+    """Static client-id blocks, one per pod: pod ``p`` owns clients
+    ``[p * n/P, (p+1) * n/P)``.  Equal blocks are required — a ragged
+    split would leave some shard without its client."""
+    if n_pods < 1 or n_clients % n_pods:
+        raise ValueError(
+            f"n_clients={n_clients} must split evenly over "
+            f"{n_pods} pods")
+    per = n_clients // n_pods
+    return [range(p * per, (p + 1) * per) for p in range(n_pods)]
+
+
+def select_pod_blocked(rng: np.random.RandomState, blocks: list[range],
+                       n_active: int) -> list[int]:
+    """Pod-blocked client selection: each pod contributes
+    ``n_active / n_pods`` clients drawn (without replacement) from its
+    own block, concatenated in pod order — so active position ``j``
+    always lands on pod ``j // (n_active / n_pods)`` and no sample ever
+    crosses a pod boundary.  Every process runs this with the same RNG
+    stream and gets the same list; the single-process executors accept
+    the same policy (via :class:`PodClients`), which is what makes
+    multi-process == single-process parity exact."""
+    n_pods = len(blocks)
+    if n_active % n_pods:
+        raise ValueError(
+            f"n_active={n_active} must split evenly over {n_pods} pods")
+    per = n_active // n_pods
+    active: list[int] = []
+    for block in blocks:
+        if per > len(block):
+            raise ValueError(
+                f"pod block {block} has {len(block)} clients; cannot "
+                f"select {per}")
+        draw = rng.choice(len(block), size=per, replace=False)
+        active.extend(int(block.start + d) for d in draw)
+    return active
+
+
+class PodClients:
+    """A (possibly partial) view of the global client population.
+
+    ``pod=p`` (multi-process): ``loaders`` holds ONLY pod ``p``'s client
+    block, in global-id order — each process constructs and advances just
+    its own loaders, which is what keeps per-pod data loading honest.
+    ``pod=None`` (single-process): ``loaders`` holds every client, and
+    the view only switches the engine to the pod-blocked selection
+    policy, so a one-host run reproduces the multi-process sample
+    streams exactly."""
+
+    def __init__(self, loaders: list[Loader], n_clients: int,
+                 n_pods: int, pod: "int | None" = None):
+        self.blocks = pod_client_blocks(n_clients, n_pods)
+        self.n_clients = n_clients
+        self.n_pods = n_pods
+        self.pod = pod
+        if pod is None:
+            if len(loaders) != n_clients:
+                raise ValueError(
+                    f"pod=None view needs all {n_clients} loaders, got "
+                    f"{len(loaders)}")
+        else:
+            if len(loaders) != len(self.blocks[pod]):
+                raise ValueError(
+                    f"pod {pod} owns {len(self.blocks[pod])} clients, got "
+                    f"{len(loaders)} loaders")
+        self.loaders = loaders
+
+    @property
+    def block(self) -> range:
+        """Global client ids whose loaders live in this view."""
+        return (range(self.n_clients) if self.pod is None
+                else self.blocks[self.pod])
+
+    def select(self, rng: np.random.RandomState,
+               n_active: int) -> list[int]:
+        """This round's GLOBAL active list under the pod-blocked policy
+        (identical on every process for the same RNG stream)."""
+        return select_pod_blocked(rng, self.blocks, n_active)
+
+    def local_indices(self, active: list[int]) -> list[int]:
+        """Positions in ``self.loaders`` for the subset of ``active``
+        this view owns, in active order (== this pod's contiguous slice
+        of the global draw, by :func:`select_pod_blocked`'s layout)."""
+        block = self.block
+        return [i - block.start for i in active if i in block]
+
+
+def make_pod_clients(ds: Dataset, parts: list[np.ndarray], batch: int,
+                     seed: int, *, n_pods: int,
+                     pod: "int | None" = None) -> PodClients:
+    """Per-pod client view over a (globally agreed) partition list: only
+    ``pod``'s block of loaders is constructed, with global-id-keyed seeds
+    (``pod=None`` builds all of them — the single-process comparator)."""
+    blocks = pod_client_blocks(len(parts), n_pods)
+    only = None if pod is None else blocks[pod]
+    return PodClients(client_loaders(ds, parts, batch, seed, only=only),
+                      len(parts), n_pods, pod)

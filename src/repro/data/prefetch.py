@@ -79,6 +79,7 @@ class Prefetcher:
         self._req: queue.Queue = queue.Queue()
         self._res: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._join_done = False
         self.build_s = 0.0
         self.wait_s = 0.0
         self._thread = threading.Thread(target=self._loop, name=name,
@@ -120,15 +121,31 @@ class Prefetcher:
 
     def get(self, timeout: Optional[float] = 600.0) -> tuple[str, Any]:
         """Next (tag, payload) in submission order.  A worker exception
-        shuts the pipeline down and re-raises here, chained."""
+        shuts the pipeline down and re-raises here, chained.  A worker
+        that DIED without posting (thread crashed outside the build try,
+        interpreter teardown killed the daemon) is detected immediately —
+        the consumer must not sit out the full timeout on a pipeline that
+        can never produce."""
         t0 = time.perf_counter()
+        deadline = None if timeout is None else t0 + timeout
         try:
-            tag, payload, err = self._res.get(timeout=timeout)
-        except queue.Empty:
-            self.close()
-            raise PrefetchError(
-                f"prefetch worker produced nothing within {timeout}s "
-                "(deadlocked or starved build?)") from None
+            while True:
+                try:
+                    tag, payload, err = self._res.get(timeout=0.1)
+                    break
+                except queue.Empty:
+                    if not self._thread.is_alive():
+                        self.close()
+                        raise PrefetchError(
+                            "prefetch worker died without posting a "
+                            "result") from None
+                    if deadline is not None and \
+                            time.perf_counter() >= deadline:
+                        self.close()
+                        raise PrefetchError(
+                            f"prefetch worker produced nothing within "
+                            f"{timeout}s (deadlocked or starved build?)"
+                        ) from None
         finally:
             self.wait_s += time.perf_counter() - t0
         if err is not None:
@@ -138,8 +155,12 @@ class Prefetcher:
         return tag, payload
 
     def close(self) -> None:
-        """Idempotent shutdown: unblocks and joins the worker thread."""
-        if self._stop.is_set() and not self._thread.is_alive():
+        """Idempotent shutdown: unblocks and joins the worker thread.
+        Safe to call any number of times in any pipeline state — a
+        close after a worker fault (or after a timed-out join) is a
+        cheap no-op, never a re-raise and never a second 10s join."""
+        if self._stop.is_set() and (self._join_done
+                                    or not self._thread.is_alive()):
             return
         self._stop.set()
         self._req.put(_SHUTDOWN)
@@ -150,6 +171,7 @@ class Prefetcher:
             except queue.Empty:
                 break
         self._thread.join(timeout=10.0)
+        self._join_done = True
 
     def __del__(self):  # pragma: no cover — belt and braces
         try:
@@ -174,7 +196,8 @@ class RoundPrefetcher:
                  k_u: int, n_active: int,
                  sup_put: Optional[Callable] = None,
                  cli_put: Optional[Callable] = None,
-                 cli_shardings=None, depth: int = 2):
+                 cli_shardings=None, depth: int = 2,
+                 select_fn: Optional[Callable] = None):
         self.labeled = labeled
         self.loaders = client_loaders_
         self.k_u = k_u
@@ -182,6 +205,12 @@ class RoundPrefetcher:
         self._sup_put = sup_put
         self._cli_put = cli_put
         self._cli_shardings = cli_shardings
+        # custom active-set policy for speculation: ``select_fn(rng) ->
+        # indices into self.loaders`` replacing the default global
+        # ``rng.choice`` (the multi-pod engine passes its pod-blocked
+        # policy restricted to this process's loaders; it must consume
+        # the RNG stream exactly as the engine's own draw will)
+        self._select_fn = select_fn
         self._pf = Prefetcher(depth=depth)
         # in-flight speculation descriptors, keyed by result tag:
         #   "sup" -> (k, labeled_snapshot)
@@ -213,8 +242,13 @@ class RoundPrefetcher:
         """Undo a speculative build's loader draws (its result is being
         discarded): restore the pre-speculation snapshots.  Only safe
         once the build's result has been collected (or the worker
-        joined) — the worker must not be mid-draw on these loaders."""
-        spec = self._spec.pop(tag)
+        joined) — the worker must not be mid-draw on these loaders.
+        Tolerates a tag whose descriptor is already gone (a result that
+        straggled in after its speculation was consumed or rolled back:
+        there is nothing left to undo)."""
+        spec = self._spec.pop(tag, None)
+        if spec is None:
+            return
         if tag == "sup":
             _, snap = spec
             self.labeled.load_state_dict(snap)
@@ -286,9 +320,13 @@ class RoundPrefetcher:
         if self.k_u > 0 and select_rng is not None:
             fork = np.random.RandomState()
             fork.set_state(select_rng.get_state())
-            active = tuple(int(a) for a in fork.choice(
-                len(self.loaders),
-                size=min(self.n_active, len(self.loaders)), replace=False))
+            if self._select_fn is not None:
+                active = tuple(int(a) for a in self._select_fn(fork))
+            else:
+                active = tuple(int(a) for a in fork.choice(
+                    len(self.loaders),
+                    size=min(self.n_active, len(self.loaders)),
+                    replace=False))
             snaps = {i: self.loaders[i].state_dict() for i in active}
             self._spec["cli"] = (active, self.k_u, snaps)
             self._pf.submit(
@@ -309,8 +347,15 @@ class RoundPrefetcher:
         """Join the worker and roll back any in-flight speculation, so
         the loaders are left exactly where the synchronous path would
         have them (the stream stays restartable).  Close-time rollbacks
-        are not mispredictions and don't count as cancels."""
-        if not self._pf.closed:
+        are not mispredictions and don't count as cancels.
+
+        Never raises and never blocks on a pipeline that cannot produce:
+        a worker that faulted (or died) mid-round is detected by
+        ``Prefetcher.get`` immediately, after which the outstanding
+        speculation is rolled back from the snapshots — the failed
+        build's partial draws are undone, not replayed.  Every
+        subsequent ``close()`` is a clean no-op."""
+        if not self._pf.closed and self._pf.worker_alive:
             # collect finished results first so rollback can't race a
             # build still running in the worker
             try:
@@ -318,7 +363,7 @@ class RoundPrefetcher:
                     tag, _ = self._pf.get(timeout=60.0)
                     self._rollback(tag)
             except PrefetchError:
-                pass  # worker already joined by Prefetcher.get()
+                pass  # worker faulted/died/starved: get() shut it down
         self._pf.close()
         if self._pf.worker_alive:
             # join timed out: a wedged build may still be mutating the

@@ -11,8 +11,9 @@ JAX 0.4.37 (no ``axis_types``) and current JAX.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-from repro.compat import AxisType, make_mesh
+from repro.compat import AxisType, make_mesh, make_mesh_exact
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,17 +23,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1, *, pods: int = 1):
-    """Whatever this host actually has (CPU tests / examples).
+    """Whatever this host (or, under ``jax.distributed``, this fleet)
+    actually has (CPU tests / examples / the multi-process runtime).
 
     ``pods > 1`` produces the multi-pod layout ``("pod", "data", "model")``
-    on host devices — the pod axis is an outer data axis, exactly as in
-    :func:`make_production_mesh`, so client-axis sharding and its tests can
-    exercise the 3-axis (multi-pod) spec without a 512-chip fleet."""
+    with the pod axis — the one whose collectives cross the DCN —
+    outermost, exactly as in :func:`make_production_mesh`.  The device
+    grid is laid out EXPLICITLY in ``(process, local)`` order so that pod
+    row ``p`` is process ``p``'s devices when the fleet has one process
+    per pod (``jax.make_mesh`` may permute devices for ring collectives,
+    which would scatter a pod across processes); single-process runs get
+    the same layout on forced host devices, so the 3-axis spec is
+    exercised without a 512-chip fleet."""
     n = len(jax.devices())
     data = max(1, n // (model * pods))
     if pods > 1:
-        return make_mesh((pods, data, model), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+        devs = sorted(jax.devices(),
+                      key=lambda d: (d.process_index, d.id))
+        grid = np.asarray(devs[: pods * data * model],
+                          dtype=object).reshape(pods, data, model)
+        return make_mesh_exact(grid, ("pod", "data", "model"))
     return make_mesh((data, model), ("data", "model"),
                      axis_types=(AxisType.Auto, AxisType.Auto))
 

@@ -416,7 +416,8 @@ def make_scanned_train_phase(plan: StepPlan, dist: DistContext,
 def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
                                 lr: float = 0.02, *,
                                 donate_carry: bool = True,
-                                depth: int = 2) -> Callable:
+                                depth: int = 2,
+                                put: Optional[Callable] = None) -> Callable:
     """:func:`make_scanned_train_phase` driven through the async prefetch
     pipeline (``repro.data.prefetch.Prefetcher``): the returned
     ``run(state, batch_thunks)`` consumes an iterable of zero-arg host
@@ -424,23 +425,29 @@ def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
     pytree — and overlaps building + device transfer of phase ``k+1``
     with phase ``k``'s execution on a background worker.  Returns
     ``(final_state, [stacked_metrics_per_phase])``; the worker is joined
-    before returning (also on error)."""
+    before returning (also on error).
+
+    ``put`` overrides the device placement of each built batch pytree
+    (default: ``jnp.asarray`` per leaf).  Under ``jax.distributed`` pass
+    :func:`make_process_local_batch_put` so each process's worker ships
+    only its own client block."""
     from repro.data.prefetch import Prefetcher
 
     phase = make_scanned_train_phase(plan, dist, lr,
                                      donate_carry=donate_carry)
+    dev_put = put or (lambda tree: jax.tree.map(jnp.asarray, tree))
 
     def run(state, batch_thunks):
         thunks = list(batch_thunks)
-        put = lambda thunk: (lambda: jax.tree.map(jnp.asarray, thunk()))
+        wrap = lambda thunk: (lambda: dev_put(thunk()))
         pf = Prefetcher(depth=depth)
         metrics = []
         try:
             if thunks:
-                pf.submit("batch0", put(thunks[0]))
+                pf.submit("batch0", wrap(thunks[0]))
             for i in range(len(thunks)):
                 if i + 1 < len(thunks):
-                    pf.submit(f"batch{i + 1}", put(thunks[i + 1]))
+                    pf.submit(f"batch{i + 1}", wrap(thunks[i + 1]))
                 _, batches = pf.get()
                 state, ms = phase(state, batches)
                 metrics.append(ms)
@@ -449,6 +456,47 @@ def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
         return state, metrics
 
     return run
+
+
+def make_process_local_batch_put(plan: StepPlan, mesh: Mesh,
+                                 specs: Optional[dict] = None, *,
+                                 leading_axes: int = 0) -> Callable:
+    """Per-pod batch placement for multi-process LM training.
+
+    Returns ``put(local_batch) -> global_batch``: every leaf whose
+    client axis (dim ``leading_axes``, i.e. dim 0 of the per-step batch
+    or dim 1 of a scanned ``(K, N, ...)`` stack) is sharded by
+    :func:`arg_shardings` is assembled from this process's
+    ``(..., n_local, ...)`` block via
+    ``jax.make_array_from_process_local_data`` into the global
+    ``(..., plan.n_clients, ...)`` array; replicated leaves (ones the
+    sanitizer left unsharded) must be passed whole — each process
+    supplies the same full value.  Pure host-side assembly + local
+    device_put: no global computation is launched, so the put is safe on
+    the prefetch worker thread while the main thread executes a
+    collective-bearing phase (two threads issuing collective programs in
+    process-dependent order would interleave the fleet's collective
+    streams and crash or deadlock them).  Works unchanged in a single
+    process, where local == global (the unit tests run it that way)."""
+    import numpy as np
+
+    shardings = arg_shardings(plan, mesh, specs or input_specs(plan))
+
+    def one(sharding: NamedSharding, local):
+        local = np.asarray(local)
+        entries = tuple(sharding.spec)
+        spec = P(*([None] * leading_axes + list(entries)))
+        client_sharded = (len(entries) > 0 and entries[0] is not None)
+        gshape = list(local.shape)
+        if client_sharded:
+            gshape[leading_axes] = plan.n_clients
+        return jax.make_array_from_process_local_data(
+            NamedSharding(mesh, spec), local, tuple(gshape))
+
+    def put(local_batch):
+        return jax.tree.map(one, shardings["batch"], local_batch)
+
+    return put
 
 
 def make_prefill_step(plan: StepPlan, dist: DistContext) -> Callable:

@@ -16,6 +16,8 @@ import argparse
 import json
 import os
 import time
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -24,18 +26,29 @@ from repro.configs import get_config, smoke_config
 from repro.core.baselines import BASELINES, make_fedswitch_sl
 from repro.core.engine import SemiSFLSystem, make_controller
 from repro.data import (Loader, client_loaders, dirichlet_partition,
-                        make_image_dataset, train_test_split,
-                        uniform_partition)
+                        make_image_dataset, make_pod_clients,
+                        train_test_split, uniform_partition)
+
+
+# baselines that can consume the prefetched phase stacks; the gate is
+# enforced both at flag resolution (CLI fail-fast) and in
+# run_training (API callers) from this single definition
+_PREFETCH_BASELINES = ("semisfl", "fedswitch-sl")
+_PREFETCH_BASELINE_ERR = ("--prefetch drives the SemiSFL round "
+                          "executors; full-model baselines have "
+                          "no phase stacks")
 
 
 def build_system(name: str, cfg, **kw):
     if name == "semisfl":
         return SemiSFLSystem(cfg, **kw)
     if name == "fedswitch-sl":
+        kw.pop("shard_clients", None)    # SemiSFLSystem-only kwarg
         return make_fedswitch_sl(cfg, **kw)
     kw.pop("mesh", None)                 # full-model baselines: no split,
     kw.pop("prefetch", None)             # no sharded executor, no phase
-    return BASELINES[name](cfg, **kw)    # stacks to prefetch
+    kw.pop("shard_clients", None)        # stacks to prefetch
+    return BASELINES[name](cfg, **kw)
 
 
 def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
@@ -45,7 +58,9 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
                  labeled_batch: int = 32, client_batch: int = 16,
                  seed: int = 0, smoke: bool = True, eval_every: int = 5,
                  k_s: int = 15, k_u: int = 4, mesh=None,
-                 prefetch: bool | None = None, log=print):
+                 prefetch: bool | None = None,
+                 shard_clients: bool | None = None,
+                 n_pods: int = 1, log=print):
     from dataclasses import replace
     cfg = smoke_config(arch) if smoke else get_config(arch)
     cfg = replace(cfg, semisfl=replace(
@@ -68,15 +83,25 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
                  uniform_partition(seed, len(unl_idx), n_clients)]
 
     kw = {} if prefetch is None else {"prefetch": prefetch}
-    if prefetch and baseline not in ("semisfl", "fedswitch-sl"):
-        raise SystemExit("--prefetch drives the SemiSFL round executors; "
-                         "full-model baselines have no phase stacks")
+    if shard_clients is not None:
+        kw["shard_clients"] = shard_clients
+    if prefetch and baseline not in _PREFETCH_BASELINES:
+        raise SystemExit(_PREFETCH_BASELINE_ERR)
     sys_ = build_system(baseline, cfg, n_clients_per_round=n_active,
                         mesh=mesh, **kw)
     state = sys_.init_state(seed)
     ctrl = make_controller(cfg, n_labeled, len(train.y))
     lab = Loader(train, lab_idx, labeled_batch, seed)
-    cls = client_loaders(train, parts, client_batch, seed + 1)
+    if n_pods > 1:
+        # per-pod loading: under jax.distributed each process constructs
+        # (and advances) ONLY its own client block's loaders; the same
+        # view on one process reproduces the multi-pod sample streams
+        import jax
+        pod = jax.process_index() if jax.process_count() > 1 else None
+        cls = make_pod_clients(train, parts, client_batch, seed + 1,
+                               n_pods=n_pods, pod=pod)
+    else:
+        cls = client_loaders(train, parts, client_batch, seed + 1)
     # ONE host-side selection RandomState per run, threaded through every
     # round: different seeds pick different client subsets, and no round
     # blocks on a device->host sync of state.round.
@@ -110,7 +135,104 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
     return state, history, sys_
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# CLI: flag/env resolution (flags always win over REPRO_* env)
+# ---------------------------------------------------------------------------
+
+_TRUE = ("1", "true", "on")
+_FALSE = ("0", "false", "off")
+
+
+def _env_tristate(env: dict, name: str) -> Optional[bool]:
+    v = env.get(name)
+    if v is None or v == "":
+        return None
+    if v.lower() in _TRUE:
+        return True
+    if v.lower() in _FALSE:
+        return False
+    raise SystemExit(f"{name}={v!r} is not a boolean "
+                     f"(use one of {_TRUE + _FALSE})")
+
+
+def _env_optint(env: dict, name: str) -> Optional[int]:
+    # one parser for the REPRO_* int vars, shared with the library
+    # bootstrap (launch/distributed.py); the CLI converts its ValueError
+    # into the SystemExit argparse-style exit
+    from repro.launch.distributed import _env_int
+    try:
+        return _env_int(env, name)
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+
+
+@dataclass(frozen=True)
+class RunSettings:
+    """Resolved launcher configuration: what the flags + ``REPRO_*`` env
+    actually mean for this process.  ``shard_clients`` / ``prefetch``
+    being non-None means the choice was explicit (flag or env) and is
+    passed through to the engine, overriding its own env defaults;
+    ``spawn`` marks the parent of a ``--num-processes N`` localhost fleet
+    (no process id yet — it only forks the children)."""
+
+    shard_clients: Optional[bool]
+    prefetch: Optional[bool]
+    num_processes: int
+    process_id: Optional[int]
+    coordinator: Optional[str]
+    spawn: bool
+
+
+def resolve_settings(args: argparse.Namespace,
+                     env: Optional[dict] = None) -> RunSettings:
+    """Flags override env; invalid combinations fail fast with a clear
+    error (SystemExit) before any JAX state is touched."""
+    e = dict(os.environ) if env is None else env
+    shard = args.shard_clients
+    if shard is None:
+        shard = _env_tristate(e, "REPRO_SHARD_CLIENTS")
+    prefetch = args.prefetch
+    if prefetch is None:
+        prefetch = _env_tristate(e, "REPRO_PREFETCH")
+    nproc = args.num_processes
+    if nproc is None:
+        nproc = _env_optint(e, "REPRO_NUM_PROCESSES")
+    nproc = 1 if nproc is None else nproc
+    pid = args.process_id
+    if pid is None:
+        pid = _env_optint(e, "REPRO_PROCESS_ID")
+    coord = args.coordinator or e.get("REPRO_COORDINATOR") or None
+
+    if nproc < 1:
+        raise SystemExit(f"--num-processes must be >= 1, got {nproc}")
+    if pid is not None and nproc <= 1:
+        raise SystemExit(
+            "--process-id/REPRO_PROCESS_ID given but --num-processes/"
+            "REPRO_NUM_PROCESSES is not > 1; a process id only means "
+            "something inside a multi-process fleet")
+    if pid is not None and not 0 <= pid < nproc:
+        raise SystemExit(
+            f"--process-id {pid} out of range for {nproc} processes")
+    if nproc > 1:
+        if shard is False:
+            raise SystemExit(
+                "multi-process execution runs the client-sharded executor; "
+                "--no-shard-clients / REPRO_SHARD_CLIENTS=0 contradicts "
+                f"--num-processes {nproc}")
+        shard = True                       # implied by the topology
+        if args.baseline != "semisfl":
+            raise SystemExit(
+                f"--num-processes {nproc} drives the SemiSFL sharded "
+                f"executor; baseline {args.baseline!r} has no "
+                "multi-process path")
+    if prefetch and args.baseline not in _PREFETCH_BASELINES:
+        raise SystemExit(_PREFETCH_BASELINE_ERR)
+    return RunSettings(shard_clients=shard, prefetch=prefetch,
+                       num_processes=nproc, process_id=pid,
+                       coordinator=coord, spawn=nproc > 1 and pid is None)
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-cnn")
     ap.add_argument("--baseline", default="semisfl",
@@ -123,34 +245,93 @@ def main() -> None:
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full-config", action="store_true")
-    ap.add_argument("--shard-clients", action="store_true",
+    ap.add_argument("--shard-clients", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="run the cross-entity phase client-sharded over "
                          "this host's devices (see README; the mesh's "
                          "data axis is sized to the largest device count "
-                         "that divides --active)")
-    ap.add_argument("--prefetch", action="store_true",
+                         "that divides --active).  Overrides "
+                         "REPRO_SHARD_CLIENTS; --no-shard-clients forces "
+                         "the vmapped executor")
+    ap.add_argument("--prefetch", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="assemble + device_put each round's batch stacks "
                          "on a background worker, overlapped with the "
                          "previous round's device execution (README: "
-                         "'Async double-buffered prefetch')")
+                         "'Async double-buffered prefetch').  Overrides "
+                         "REPRO_PREFETCH")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="run the round multi-process (one pod per "
+                         "process, jax.distributed).  Without "
+                         "--process-id this process spawns the whole "
+                         "fleet on localhost; with it (or "
+                         "REPRO_PROCESS_ID, as the spawner sets) it "
+                         "joins as that pod.  Overrides "
+                         "REPRO_NUM_PROCESSES")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's pod index in the fleet "
+                         "(overrides REPRO_PROCESS_ID)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0's coordinator service "
+                         "(overrides REPRO_COORDINATOR; spawned localhost "
+                         "fleets pick a free port automatically)")
     ap.add_argument("--ckpt", default=None)
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv: Optional[list] = None) -> None:
+    args = build_parser().parse_args(argv)
+    settings = resolve_settings(args)
+
+    if settings.spawn:
+        # parent of a localhost fleet: fork one child per pod (they see
+        # REPRO_PROCESS_ID and take the initialize path) and just wait
+        from repro.launch.distributed import spawn_local
+        raise SystemExit(spawn_local(settings.num_processes))
+
+    dist_info = None
+    if settings.num_processes > 1:
+        from repro.launch import distributed as dist
+        dist_info = dist.initialize(settings.num_processes,
+                                    settings.process_id,
+                                    settings.coordinator)
 
     mesh = None
-    if args.shard_clients:
-        from repro.launch.mesh import make_client_mesh
-        mesh = make_client_mesh(args.active)
-    state, history, _ = run_training(
-        arch=args.arch, baseline=args.baseline, rounds=args.rounds,
-        n_labeled=args.labeled, n_total=args.total, n_clients=args.clients,
-        n_active=args.active, dirichlet=args.dirichlet, seed=args.seed,
-        smoke=not args.full_config, mesh=mesh,
-        prefetch=True if args.prefetch else None)
-    if args.ckpt:
-        save_state(args.ckpt, state.params,
-                   {"history": history, "arch": args.arch,
-                    "baseline": args.baseline})
-        print(f"checkpoint -> {args.ckpt}.npz")
+    if settings.shard_clients:
+        if settings.num_processes > 1:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(pods=settings.num_processes)
+        else:
+            from repro.launch.mesh import make_client_mesh
+            mesh = make_client_mesh(args.active)
+
+    # metric logging + checkpoint writes are process-0-only; every other
+    # pod computes the same replicated values and stays silent
+    is_main = dist_info is None or dist_info.is_coordinator
+    try:
+        state, history, _ = run_training(
+            arch=args.arch, baseline=args.baseline, rounds=args.rounds,
+            n_labeled=args.labeled, n_total=args.total,
+            n_clients=args.clients, n_active=args.active,
+            dirichlet=args.dirichlet, seed=args.seed,
+            smoke=not args.full_config, mesh=mesh,
+            prefetch=settings.prefetch,
+            shard_clients=settings.shard_clients,
+            n_pods=max(settings.num_processes, 1),
+            log=print if is_main else (lambda *a, **k: None))
+        if args.ckpt and is_main:
+            params = state.params
+            if dist_info is not None and dist_info.active:
+                from repro.launch.distributed import fetch_tree
+                params = fetch_tree(params)
+            save_state(args.ckpt, params,
+                       {"history": history, "arch": args.arch,
+                        "baseline": args.baseline})
+            print(f"checkpoint -> {args.ckpt}.npz")
+    finally:
+        if dist_info is not None and dist_info.active:
+            from repro.launch.distributed import shutdown
+            shutdown()
 
 
 if __name__ == "__main__":

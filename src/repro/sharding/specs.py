@@ -147,6 +147,18 @@ def replicated_pspecs(tree: Any) -> Any:
     return jax.tree.map(lambda l: P(*([None] * _leaf_ndim(l))), tree)
 
 
+def replicated_sharding(mesh: Mesh, leaf_or_ndim) -> NamedSharding:
+    """Rank-matched fully-replicated NamedSharding on ``mesh``.
+
+    On a multi-process mesh this is the placement for values every
+    process holds identically (supervised stacks, carried server state):
+    ``device_put`` with it materializes only this process's addressable
+    copies — no cross-process transfer."""
+    nd = (leaf_or_ndim if isinstance(leaf_or_ndim, int)
+          else _leaf_ndim(leaf_or_ndim))
+    return NamedSharding(mesh, P(*([None] * nd)))
+
+
 def leading_axis_pspecs(tree: Any, data_axes: tuple) -> Any:
     """Client-stacked trees with ONLY the leading (client) axis sharded.
 

@@ -1,0 +1,116 @@
+"""Subprocess launcher for jax.distributed multi-process CPU tests.
+
+Spawns N python processes running the same worker script, each pinned to
+CPU with a forced host-device count and wired into one jax.distributed
+fleet via the ``REPRO_*`` env that ``repro.launch.distributed.initialize``
+reads.  The coordinator port is allocated fresh per launch so parallel
+test runs don't collide.  Used by tests/test_distributed.py and by the
+CI ``distributed-parity`` job (which just runs that test).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from dataclasses import dataclass
+
+from repro.launch.distributed import free_port
+
+
+@dataclass
+class ProcResult:
+    process_id: int
+    returncode: int
+    stdout: str
+    stderr: str
+
+
+def _launch_once(script: str, num_processes: int, devices_per_process: int,
+                 timeout: float, env_extra: dict | None) -> list[ProcResult]:
+    coordinator = f"127.0.0.1:{free_port()}"
+    # hang watchdog: a wedged worker (deadlocked collective, init race)
+    # dumps every thread's stack and exits WELL before the fleet
+    # timeout, so the parent gets a diagnosable failure + fast retry
+    # instead of a silent multi-minute stall
+    dump_s = max(60, int(timeout) - 60)
+    script = (f"import faulthandler\n"
+              f"faulthandler.dump_traceback_later({dump_s}, exit=True)\n"
+              + script)
+    procs = []
+    for p in range(num_processes):
+        env = {
+            "PYTHONPATH": "src",
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            # forced host devices: a CPU-only test must not probe real
+            # accelerators (libtpu probing hangs for minutes)
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": ("--xla_force_host_platform_device_count="
+                          f"{devices_per_process}"),
+            "REPRO_NUM_PROCESSES": str(num_processes),
+            "REPRO_PROCESS_ID": str(p),
+            "REPRO_COORDINATOR": coordinator,
+        }
+        if "TMPDIR" in os.environ:
+            env["TMPDIR"] = os.environ["TMPDIR"]
+        if env_extra:
+            env.update(env_extra)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", script], env=env, cwd=".",
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    # one SHARED deadline for the whole fleet: processes are collected
+    # serially, and a wedged fleet must cost `timeout` once, not
+    # num_processes times (the per-test pytest-timeout budget has to
+    # cover a failing attempt AND the diagnostics + retry)
+    import time
+    deadline = time.monotonic() + timeout
+    results = []
+    for p, proc in enumerate(procs):
+        try:
+            out, err = proc.communicate(
+                timeout=max(5.0, deadline - time.monotonic()))
+            rc = proc.returncode
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            out, err = proc.communicate()
+            rc = -9
+        results.append(ProcResult(p, rc, out, err))
+    return results
+
+
+def launch_fleet(script: str, *, num_processes: int = 2,
+                 devices_per_process: int = 4, timeout: float = 540.0,
+                 env_extra: dict | None = None,
+                 retries: int = 1) -> list[ProcResult]:
+    """Run ``script`` (python source) in ``num_processes`` processes that
+    together form one jax.distributed fleet on localhost CPU.  Returns
+    per-process results; raises nothing itself — callers assert on the
+    returncodes so pytest shows every process's output on failure.
+
+    ``retries``: the jax.distributed bootstrap has a narrow init window
+    (coordinator handshake + first backend creation) that can abort
+    spuriously on a saturated runner; a failed fleet is relaunched — on
+    a FRESH coordinator port — up to ``retries`` extra times, loudly, so
+    a flaky-but-green run stays visible in the log while a deterministic
+    failure still fails every attempt."""
+    results = _launch_once(script, num_processes, devices_per_process,
+                           timeout, env_extra)
+    for attempt in range(retries):
+        if all(r.returncode == 0 for r in results):
+            break
+        print(f"launch_fleet: attempt {attempt + 1} failed "
+              f"(rcs={[r.returncode for r in results]}); retrying on a "
+              "fresh coordinator port", file=sys.stderr, flush=True)
+        results = _launch_once(script, num_processes, devices_per_process,
+                               timeout, env_extra)
+    return results
+
+
+def assert_fleet_ok(results: list[ProcResult], marker: str) -> None:
+    """Every process exited 0 and printed ``marker``; on failure the
+    assertion message carries all stdout/stderr for diagnosis."""
+    report = "\n".join(
+        f"--- process {r.process_id} rc={r.returncode} ---\n"
+        f"{r.stdout}\n{r.stderr}" for r in results)
+    assert all(r.returncode == 0 for r in results), report
+    for r in results:
+        assert marker in r.stdout, report

@@ -11,6 +11,13 @@ def pytest_configure(config):
         "markers",
         "tpu: needs real TPU hardware (Mosaic-compiled Pallas); "
         "auto-skipped when jax.default_backend() is not 'tpu'")
+    if not config.pluginmanager.hasplugin("timeout"):
+        # tests annotate explicit caps; without pytest-timeout installed
+        # the marker is inert but must still be known
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test wall-clock cap (enforced by "
+            "pytest-timeout where installed — CI always installs it)")
 
 
 def pytest_collection_modifyitems(config, items):

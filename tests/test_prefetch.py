@@ -187,6 +187,66 @@ def test_worker_exception_propagates_and_joins():
     assert not _live_prefetch_threads()
 
 
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_close_after_worker_death_is_clean_and_idempotent():
+    """A worker that DIES mid-round without posting (thread crashed
+    outside the build try — simulated by breaking the result queue)
+    must not wedge ``close()``: the first close returns promptly (no
+    60s result-wait) having rolled the speculative draws back, and
+    every further close is a no-op — no re-raise, no second join."""
+    import time
+
+    cfg = _tiny_cfg()
+    _, lab, cls = _rig(cfg)
+    pf = RoundPrefetcher(lab, cls, k_u=2, n_active=3)
+    pf.get_supervised(3)
+    pf.get_clients([0, 1, 2], 2)
+    consumed = {"lab": _loader_pos(lab),
+                "cls": [_loader_pos(c) for c in cls]}
+
+    def broken_put(*a, **k):
+        raise RuntimeError("result queue broken")
+
+    pf._pf._res.put = broken_put             # worker dies on next post
+    pf.speculate(3, np.random.RandomState(0))
+    deadline = time.time() + 10.0
+    while pf._pf.worker_alive and time.time() < deadline:
+        time.sleep(0.05)
+    assert not pf._pf.worker_alive
+
+    t0 = time.time()
+    pf.close()                               # must not wait out a result
+    assert time.time() - t0 < 30.0
+    # the dead build's draws were rolled back to the consumed position
+    assert _same_pos(_loader_pos(lab), consumed["lab"])
+    for c, pos in zip(cls, consumed["cls"]):
+        assert _same_pos(_loader_pos(c), pos)
+    pf.close()                               # idempotent, no re-raise
+    pf.close()
+    assert not _live_prefetch_threads()
+
+    # same property when the fault was a BUILD error the consumer saw:
+    # close-after-fault is a clean no-op, twice
+    _, lab2, cls2 = _rig(cfg)
+    boom = {"n": 0}
+
+    def poisoned(xs, ys):
+        boom["n"] += 1
+        if boom["n"] >= 2:
+            raise RuntimeError("injected build fault")
+        return xs, ys
+
+    pf2 = RoundPrefetcher(lab2, cls2, k_u=2, n_active=3, sup_put=poisoned)
+    pf2.get_supervised(3)
+    pf2.speculate(3, np.random.RandomState(0))
+    with pytest.raises(PrefetchError):
+        pf2.get_supervised(3)
+    pf2.close()
+    pf2.close()
+    assert not _live_prefetch_threads()
+
+
 def test_close_rolls_back_mid_flight_speculation():
     cfg = _tiny_cfg()
     _, lab, cls = _rig(cfg)
