@@ -4,7 +4,7 @@ vs FedSwitch-SL (identical pipeline without it) at Dir(0.5) and Dir(0.05).
 
   PYTHONPATH=src python examples/noniid_ablation.py
 """
-from benchmarks.common import make_rig, run_method
+from benchmarks.common import run_method
 
 for alpha in (0.5, 0.05):
     print(f"\n=== Dirichlet({alpha}) ===")

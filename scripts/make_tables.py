@@ -5,7 +5,6 @@ reports/dryrun/*.json (EXPERIMENTS.md consumes the output).
 """
 import glob
 import json
-import os
 
 ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ORDER_ARCHS = ["qwen2.5-14b", "qwen2-vl-7b", "stablelm-1.6b", "zamba2-7b",

@@ -12,9 +12,7 @@ Configs are registered by id (``--arch <id>`` on every launcher) via
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-import math
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
@@ -44,7 +42,8 @@ class MoEConfig:
     router_aux_loss_coef: float = 0.001
 
     def is_moe_layer(self, idx: int) -> bool:
-        return idx >= self.first_moe_layer and (idx - self.first_moe_layer) % self.period == 0
+        return (idx >= self.first_moe_layer
+                and (idx - self.first_moe_layer) % self.period == 0)
 
 
 @dataclass(frozen=True)

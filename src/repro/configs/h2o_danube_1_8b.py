@@ -1,4 +1,5 @@
-"""H2O-Danube-1.8B — llama+mistral mix with sliding-window attention. [arXiv:2401.16818]"""
+"""H2O-Danube-1.8B — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818]"""
 from repro.configs.base import ArchConfig, register
 
 H2O_DANUBE_1_8B = register(ArchConfig(

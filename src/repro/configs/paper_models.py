@@ -6,8 +6,6 @@ CNN is the 2-conv + FC(512) + softmax model used on SVHN.
 Split layers (Section V-C): CNN@2, AlexNet@5, VGG13@10, VGG16@13 — expressed
 here as conv-stage indices in our composable CNN builder.
 """
-from dataclasses import replace
-
 from repro.configs.base import ArchConfig, SemiSFLConfig, register
 
 

@@ -1,4 +1,5 @@
-"""StableLM-2-1.6B — dense MHA, partial rotary, LayerNorm. [hf:stabilityai/stablelm-2-1_6b]"""
+"""StableLM-2-1.6B — dense MHA, partial rotary, LayerNorm.
+[hf:stabilityai/stablelm-2-1_6b]"""
 from repro.configs.base import ArchConfig, register
 
 STABLELM_1_6B = register(ArchConfig(

@@ -20,7 +20,6 @@ comparison isolates algorithmic differences, like the paper's testbed did.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -30,7 +29,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import losses
 from repro.core.ema import ema_update
-from repro.core.engine import SemiSFLSystem, selection_rng
+from repro.core.engine import SemiSFLSystem, _host, selection_rng
 from repro.data.augment import strong_augment, weak_augment
 from repro.data.pipeline import Loader, stack_client_batches
 from repro.models import build_model
@@ -138,7 +137,8 @@ class FLBase:
             upd, opt = self.opt.update(grads, state.opt, state.params, lr)
             params = apply_updates(state.params, upd)
             teacher = ema_update(state.teacher, params, s.ema_decay)
-            return FLState(params, teacher, opt, rng, state.round), loss
+            return FLState(params=params, teacher=teacher, opt=opt, rng=rng,
+                           round=state.round), loss
 
         self.supervised_step = jax.jit(supervised_step)
 
@@ -159,13 +159,13 @@ class FLBase:
                   rng_np: Optional[np.random.RandomState] = None):
         rng_np = selection_rng(self, rng_np)
         k_s = controller.k_s if controller is not None else self.s.k_s_init
-        step0 = int(state.round) * (self.s.k_s_init + self.s.k_u)
+        step0 = int(_host(state.round)) * (self.s.k_s_init + self.s.k_u)
         f_s = []
         for k in range(k_s):
             x, y = labeled.next()
             state, loss = self.supervised_step(state, jnp.asarray(x),
                                                jnp.asarray(y), step0 + k)
-            f_s.append(float(loss))
+            f_s.append(float(_host(loss)))
 
         active = list(rng_np.choice(len(client_loaders_),
                                     size=min(self.n_active,
@@ -180,10 +180,11 @@ class FLBase:
             client_params, rng, loss = self.local_step(
                 client_params, state.teacher, state.params, jnp.asarray(xu),
                 rng, step0 + k_s + k)
-            f_u.append(float(loss))
+            f_u.append(float(_host(loss)))
         params = jax.tree.map(lambda t: t.mean(axis=0), client_params)
         teacher = ema_update(state.teacher, params, self.s.ema_decay)
-        state = FLState(params, teacher, state.opt, rng, state.round + 1)
+        state = FLState(params=params, teacher=teacher, opt=state.opt,
+                        rng=rng, round=state.round + 1)
         fs = float(np.mean(f_s)) if f_s else 0.0
         fu = float(np.mean(f_u)) if f_u else 0.0
         if controller is not None:
@@ -195,9 +196,9 @@ class FLBase:
         params = state.teacher if use_teacher else state.params
         correct = 0.0
         for i in range(0, len(test_y), batch):
-            correct += float(self.eval_batch(
+            correct += float(_host(self.eval_batch(
                 params, jnp.asarray(test_x[i: i + batch]),
-                jnp.asarray(test_y[i: i + batch])))
+                jnp.asarray(test_y[i: i + batch]))))
         return correct / len(test_y)
 
 
@@ -216,15 +217,16 @@ class SupervisedOnly(FLBase):
                   rng_np=None):
         # clients are not involved (Section V-D1)
         k_s = controller.k_s if controller is not None else self.s.k_s_init
-        step0 = int(state.round) * self.s.k_s_init
+        step0 = int(_host(state.round)) * self.s.k_s_init
         f_s = []
         for k in range(k_s):
             x, y = labeled.next()
             state, loss = self.supervised_step(state, jnp.asarray(x),
                                                jnp.asarray(y), step0 + k)
-            f_s.append(float(loss))
-        state = FLState(state.params, state.teacher, state.opt, state.rng,
-                        state.round + 1)
+            f_s.append(float(_host(loss)))
+        state = FLState(params=state.params, teacher=state.teacher,
+                        opt=state.opt, rng=state.rng,
+                        round=state.round + 1)
         fs = float(np.mean(f_s)) if f_s else 0.0
         if controller is not None:
             controller.update(fs, fs)
@@ -386,7 +388,8 @@ class FedMatch(FLBase):
             sigma = apply_updates(state.params["sigma"], upd)
             params = {"sigma": sigma, "psi": psi}
             teacher = ema_update(state.teacher, params, s.ema_decay)
-            return FLState(params, teacher, opt, rng, state.round), loss
+            return FLState(params=params, teacher=teacher, opt=opt, rng=rng,
+                           round=state.round), loss
 
         self.supervised_step = jax.jit(supervised_step)
 

@@ -26,7 +26,6 @@ def dirichlet_partition(seed: int, labels: np.ndarray, n_clients: int,
         for i, part in enumerate(np.split(idx, cuts)):
             shares[i].append(part)
     out = []
-    leftovers = []
     for i in range(n_clients):
         s = np.concatenate(shares[i]) if shares[i] else np.empty(0, int)
         out.append(s)

@@ -60,7 +60,7 @@ class Loader:
         self._order = sd["order"].copy()
         self._cursor = sd["cursor"]
 
-    def clone(self) -> "Loader":
+    def clone(self) -> Loader:
         """Independent loader continuing this one's exact stream (shares
         the dataset arrays, deep-copies the sampling state)."""
         other = copy.copy(self)
@@ -99,7 +99,7 @@ class Loader:
 
 
 def client_loaders(ds: Dataset, parts: list[np.ndarray], batch: int,
-                   seed: int, *, only: "range | list[int] | None" = None
+                   seed: int, *, only: range | list[int] | None = None
                    ) -> list[Loader]:
     """One loader per client partition.  ``only`` restricts construction
     to those GLOBAL client ids (per-pod loading) while keeping every
@@ -148,6 +148,11 @@ def stack_client_batches_many(loaders: list[Loader], active: list[int],
         if callable(sharding):
             return sharding(stack)
         import jax  # host-only module otherwise; keep cheap-import
+        # Sharding objects reaching this branch are single-process (fully
+        # addressable) by construction; multi-process engines pass the
+        # pod-assembler CALLABLE above, so this device_put never launches
+        # a collective off the worker thread.
+        # reprolint: disable=RL003 reason=single-process sharding, see above
         return jax.device_put(stack, sharding)
 
     x_sharding, y_sharding = shardings
@@ -208,7 +213,7 @@ class PodClients:
     streams exactly."""
 
     def __init__(self, loaders: list[Loader], n_clients: int,
-                 n_pods: int, pod: "int | None" = None):
+                 n_pods: int, pod: int | None = None):
         self.blocks = pod_client_blocks(n_clients, n_pods)
         self.n_clients = n_clients
         self.n_pods = n_pods
@@ -247,7 +252,7 @@ class PodClients:
 
 def make_pod_clients(ds: Dataset, parts: list[np.ndarray], batch: int,
                      seed: int, *, n_pods: int,
-                     pod: "int | None" = None) -> PodClients:
+                     pod: int | None = None) -> PodClients:
     """Per-pod client view over a (globally agreed) partition list: only
     ``pod``'s block of loaders is constructed, with global-id-keyed seeds
     (``pod=None`` builds all of them — the single-process comparator)."""

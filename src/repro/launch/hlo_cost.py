@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from functools import lru_cache
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
@@ -100,14 +99,14 @@ class Cost:
     collectives: dict = field(default_factory=lambda: {
         k: 0.0 for k in COLLECTIVE_KINDS})
 
-    def __iadd__(self, other: "Cost"):
+    def __iadd__(self, other: Cost):
         self.flops += other.flops
         self.traffic += other.traffic
         for k in COLLECTIVE_KINDS:
             self.collectives[k] += other.collectives[k]
         return self
 
-    def scaled(self, f: float) -> "Cost":
+    def scaled(self, f: float) -> Cost:
         return Cost(self.flops * f, self.traffic * f,
                     {k: v * f for k, v in self.collectives.items()})
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import INPUT_SHAPES, get_config, smoke_config
+from repro.configs import INPUT_SHAPES, smoke_config
 from repro.launch.steps import StepPlan, make_decode_step, make_prefill_step
 from repro.models import DistContext, build_model
 

@@ -19,7 +19,6 @@ NamedShardings for the production mesh.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -36,7 +35,7 @@ from repro.core.split import apply_projection_head, init_projection_head, pool_f
 from repro.launch.mesh import data_axes_size, mesh_axes
 from repro.models import DistContext, build_model
 from repro.sharding.specs import (client_batch_pspec, client_stack_pspecs,
-                                  tree_pspecs, tree_shardings)
+                                  tree_pspecs)
 
 Array = jax.Array
 

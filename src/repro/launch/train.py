@@ -13,7 +13,6 @@ the full configs are exercised via `repro.launch.dryrun`.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 from dataclasses import dataclass

@@ -11,8 +11,6 @@ parameter-heavy FC layers stay on the PS.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -174,7 +174,6 @@ def apply_moe_ep(p: Params, cfg: ArchConfig, x: Array,
     if dist.mesh is None or msize == 1 or m.num_experts % msize != 0:
         return apply_moe_dense(p, cfg, x)
     maxis = dist.model_axis
-    e_local = m.num_experts // msize
     all_axes = tuple(dist.data_axes) + (maxis,)
 
     def local_fn(router, experts, xl):

@@ -30,7 +30,8 @@ def _rotate(x: Array, cos: Array, sin: Array) -> Array:
     return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
 
 
-def apply_rope(x: Array, positions: Array, theta: float, rope_pct: float = 1.0) -> Array:
+def apply_rope(x: Array, positions: Array, theta: float,
+               rope_pct: float = 1.0) -> Array:
     """x: (B, S, H, hd); positions: (B, S) int. Partial rotary via rope_pct."""
     hd = x.shape[-1]
     rot_dim = int(hd * rope_pct)

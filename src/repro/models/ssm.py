@@ -168,7 +168,8 @@ def apply_ssm(
         if mode == "prefill" and cache is not None:
             # final state for subsequent decode: rerun last chunk state only
             new_cache = SSMCache(
-                conv=jnp.concatenate([cache.conv, conv_out], axis=1)[:, -(s.conv_width - 1):],
+                conv=jnp.concatenate([cache.conv, conv_out],
+                                     axis=1)[:, -(s.conv_width - 1):],
                 state=_final_state(xs, dt, A, Bv),
             )
 

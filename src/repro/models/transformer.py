@@ -17,22 +17,21 @@ layers respectively.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import xlstm as xl
-from repro.models.attention import (KVCache, apply_attention, init_attention,
+from repro.models.attention import (apply_attention, init_attention,
                                     init_kv_cache)
 from repro.models.common import (Params, apply_mlp, apply_norm, dense_init,
                                  embed_init, init_mlp, init_norm)
-from repro.models.mla import MLACache, apply_mla, init_mla, init_mla_cache
+from repro.models.mla import apply_mla, init_mla, init_mla_cache
 from repro.models.moe import DistContext, apply_moe, init_moe
 from repro.models.rope import default_mrope_positions, default_positions
-from repro.models.ssm import SSMCache, apply_ssm, init_ssm, init_ssm_cache
+from repro.models.ssm import apply_ssm, init_ssm, init_ssm_cache
 
 Array = jax.Array
 
@@ -107,8 +106,10 @@ def _init_attn_stack(key: Array, cfg: ArchConfig, n: int, first_idx: int, *,
                      cross: bool = False) -> Params:
     """Stacked params for n homogeneous layers starting at first_idx."""
     keys = jax.random.split(key, max(n, 1))
-    return jax.vmap(lambda k: _init_attn_layer(k, cfg, first_idx, cross=cross))(keys[:n]) \
-        if n else None
+    if not n:
+        return None
+    return jax.vmap(
+        lambda k: _init_attn_layer(k, cfg, first_idx, cross=cross))(keys[:n])
 
 
 def _run_attn_stack(stack: Optional[Params], cfg: ArchConfig, x: Array, *,
@@ -307,7 +308,6 @@ class HybridMamba(DecoderLM):
         dt = _dtype(cfg)
         per = cfg.shared_attn_period or cfg.num_layers
         n_apps = n // per
-        window = cfg.sliding_window
         one_ssm = init_ssm_cache(batch, cfg, dt)
         return {
             "ssm": jax.tree.map(
@@ -623,7 +623,6 @@ class EncDecModel(DecoderLM):
     def top_apply(self, params, features, *, extras, mode="train",
                   cache=None, dist=DistContext()):
         cfg = self.cfg
-        dt = _dtype(cfg)
         hd = cfg.head_dim or cfg.d_model // cfg.num_heads
         if mode != "decode":
             enc, _, aux = _run_attn_stack(

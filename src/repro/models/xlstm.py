@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, XLSTMConfig
 from repro.models.common import (Params, apply_mlp, apply_norm, dense_init,
-                                 init_mlp, init_norm, ones, zeros)
+                                 init_mlp, init_norm)
 
 Array = jax.Array
 

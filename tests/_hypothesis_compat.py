@@ -10,6 +10,10 @@ real search.
 """
 from __future__ import annotations
 
+# the module's whole purpose is re-export: test modules import the
+# hypothesis surface from here so the fallback can stand in for it
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

@@ -46,3 +46,33 @@ def pytest_collection_modifyitems(config, items):
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture
+def no_implicit_transfers():
+    """Run the test under ``jax.transfer_guard("disallow")``: every
+    IMPLICIT host->device transfer raises instead of silently happening —
+    jit called on numpy args (a forgotten device_put of batch data),
+    eager ops mixing host constants with device arrays (``state.round +
+    1`` once per round), integer indexing of device stacks (``xs[i]``
+    commits the index constant).
+
+    Explicit transfers — ``jax.device_put``, ``jnp.asarray(np_val)``,
+    ``jax.device_get`` — stay legal: the repo's hot-path contract is that
+    every transfer must be visible at the call site (engine's ``_host``)
+    so a sync regression can be grepped for, which is also why the static
+    twin of this net (reprolint RL002) checks the same call patterns.
+
+    Two scope caveats baked into the design:
+
+      * test SETUP legitimately builds constants (``PRNGKey``,
+        ``jnp.zeros`` queue init) — guarded tests wrap their setup in a
+        short ``jax.transfer_guard("allow")`` block, keeping the round
+        loop itself under the strict net;
+      * the guard is thread-local, so the prefetch worker thread (whose
+        whole job is device transfer) is unaffected — its safety is
+        covered by reprolint RL003's call-graph rule instead.
+    """
+    import jax
+    with jax.transfer_guard("disallow"):
+        yield

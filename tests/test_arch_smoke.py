@@ -159,7 +159,6 @@ def test_decode_matches_prefill_continuation():
 
 def test_mlstm_chunked_matches_stepwise():
     """xLSTM invariant: chunk-parallel mLSTM == sequential recurrence."""
-    from repro.configs import get_config
     from repro.models import xlstm as xl
     cfg = _f32(smoke_config("xlstm-1.3b"))
     p = xl.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)

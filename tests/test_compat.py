@@ -304,6 +304,7 @@ def test_dispatch_unknown_kernel_is_a_clear_error():
 
 
 def test_all_five_kernel_modules_are_dispatched():
-    import repro.kernels  # noqa: F401 — ops.py registers on import
+    # ops.py registers every kernel on import
+    import repro.kernels  # noqa: F401
     assert set(dispatch.registered()) >= {
         "clustering_loss", "flash_attention", "mamba2_scan", "slstm_scan"}

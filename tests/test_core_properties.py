@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) for the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
@@ -172,7 +171,7 @@ def test_kmin_formula(alpha, beta):
 
 @given(st.floats(0.0, 0.99))
 def test_sgd_momentum_first_step_is_plain_sgd(mom):
-    from repro.optim import apply_updates, sgd
+    from repro.optim import sgd
     opt = sgd(momentum=mom)
     p = {"w": jnp.ones(3)}
     g = {"w": jnp.ones(3)}

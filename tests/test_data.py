@@ -3,13 +3,11 @@ augmentations."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.data import (Loader, dirichlet_partition, make_image_dataset,
                         make_lm_dataset, partition_stats, strong_augment,
-                        token_strong, train_test_split, uniform_partition,
-                        weak_augment)
+                        token_strong, weak_augment)
 
 settings.register_profile("data", max_examples=15, deadline=None)
 settings.load_profile("data")

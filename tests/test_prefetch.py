@@ -72,11 +72,14 @@ def _run(cfg, *, prefetch, scan_rounds, rounds=3):
     """3 rounds with a FORCED Eq. (10) shrink on the last one — with
     prefetch on, the worker has already speculated the old K_s by then,
     so the cancel/reshape path is exercised every run."""
-    train, lab, cls = _rig(cfg)
-    sys_ = SemiSFLSystem(cfg, n_clients_per_round=3,
-                         scan_rounds=scan_rounds, prefetch=prefetch)
-    state = sys_.init_state(0)
-    ctrl = make_controller(cfg, 40, len(train.y))
+    # setup commits constants (PRNGKey, queue zeros) — allowed explicitly
+    # so the round loop runs under the fixture's transfer-guard net
+    with jax.transfer_guard("allow"):
+        train, lab, cls = _rig(cfg)
+        sys_ = SemiSFLSystem(cfg, n_clients_per_round=3,
+                             scan_rounds=scan_rounds, prefetch=prefetch)
+        state = sys_.init_state(0)
+        ctrl = make_controller(cfg, 40, len(train.y))
     metrics = []
     for r in range(rounds):
         if r == rounds - 1:
@@ -98,7 +101,8 @@ def _assert_states_bitwise_equal(a, b):
 
 @pytest.mark.parametrize("scan_rounds", [True, False],
                          ids=["scanned", "eager"])
-def test_prefetched_executor_bitwise_parity(scan_rounds):
+def test_prefetched_executor_bitwise_parity(scan_rounds,
+                                            no_implicit_transfers):
     cfg = _tiny_cfg()
     s_sync, m_sync, _, lab_sync, cls_sync = _run(
         cfg, prefetch=False, scan_rounds=scan_rounds)
@@ -117,7 +121,7 @@ def test_prefetched_executor_bitwise_parity(scan_rounds):
     assert not _live_prefetch_threads()
 
 
-def test_prefetch_overlap_happens():
+def test_prefetch_overlap_happens(no_implicit_transfers):
     """Rounds after the first consume speculative buffers: the worker
     must have done real build work and the consumer must not have eaten
     it all back waiting."""
@@ -129,18 +133,19 @@ def test_prefetch_overlap_happens():
     assert stats["overlap_frac"] > 0.0
 
 
-def test_pinned_active_set_mismatch_rebuilds_inline():
+def test_pinned_active_set_mismatch_rebuilds_inline(no_implicit_transfers):
     """An explicitly pinned ``active=`` that differs from the forked-RNG
     speculation must roll the client loaders back and rebuild — states
     stay bit-identical to the synchronous run with the same pin."""
     cfg = _tiny_cfg()
 
     def run(prefetch):
-        train, lab, cls = _rig(cfg)
-        sys_ = SemiSFLSystem(cfg, n_clients_per_round=3,
-                             scan_rounds=True, prefetch=prefetch)
-        state = sys_.init_state(0)
-        ctrl = make_controller(cfg, 40, len(train.y))
+        with jax.transfer_guard("allow"):   # setup, see _run
+            train, lab, cls = _rig(cfg)
+            sys_ = SemiSFLSystem(cfg, n_clients_per_round=3,
+                                 scan_rounds=True, prefetch=prefetch)
+            state = sys_.init_state(0)
+            ctrl = make_controller(cfg, 40, len(train.y))
         for r in range(3):
             state, _ = sys_.run_round(state, lab, cls, ctrl,
                                       active=[(r + i) % 4 for i in range(3)])
@@ -286,7 +291,7 @@ def test_prefetcher_fifo_and_error_chaining():
 # LM task: the scanned train phase through the prefetch pipeline
 # ---------------------------------------------------------------------------
 
-def test_lm_prefetched_phase_matches_sequential():
+def test_lm_prefetched_phase_matches_sequential(no_implicit_transfers):
     """launch/steps.py::make_prefetched_train_phase == the same scanned
     phase driven synchronously, over 2 phases."""
     from repro.configs.base import InputShape
@@ -298,9 +303,10 @@ def test_lm_prefetched_phase_matches_sequential():
     cfg = replace(smoke_config("qwen3-14b"), dtype="float32")
     cfg = replace(cfg, semisfl=replace(cfg.semisfl, queue_len=32,
                                        confidence_threshold=0.0))
-    plan = make_plan(cfg, InputShape("train_tiny", 8, 4, "train"),
-                     n_clients=2)
-    specs = input_specs(plan)
+    with jax.transfer_guard("allow"):   # spec building, see _run
+        plan = make_plan(cfg, InputShape("train_tiny", 8, 4, "train"),
+                         n_clients=2)
+        specs = input_specs(plan)
     rng = np.random.RandomState(0)
 
     def realize(x):

@@ -4,7 +4,6 @@ prepends the data axes; the divisibility sanitizer only ever *removes*
 sharding."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

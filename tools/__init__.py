@@ -1,0 +1,3 @@
+"""Repo tooling (not shipped with the library).  ``tools.analysis`` is
+the reprolint static-analysis suite; run it from the repo root as
+``python -m tools.analysis src tests benchmarks``."""

@@ -1,0 +1,41 @@
+"""reprolint — repo-invariant static analysis for the SemiSFL reproduction.
+
+Every rule here encodes a correctness invariant that was first learned as
+a production-style failure (see CHANGES.md and the README section
+"Invariants and static analysis"):
+
+  RL001  compat-boundary       version-drifted JAX APIs (shard_map,
+                               make_mesh, AxisType, use_mesh, the Pallas
+                               import surface) may only be touched by
+                               ``src/repro/compat.py``.
+  RL002  host-sync-in-hot-path ``int()``/``float()``/``bool()``/
+                               ``.item()``/``np.asarray`` inside
+                               jitted/scanned step functions, and
+                               state-derived host conversions in the
+                               round loop.
+  RL003  worker-collectives    code reachable from a prefetch worker
+                               thread must not launch collectives
+                               (``jax.device_put`` onto shardings,
+                               ``multihost_utils``).
+  RL004  process-0 side effects checkpoint/log writes in multi-process
+                               code paths must be guarded by a
+                               process-index check.
+  RL005  namedtuple-unpacking  fragile positional construction /
+                               index-based access of growing state
+                               NamedTuples (``SemiSFLState`` & friends).
+  RL006  prng-discipline       no global ``np.random`` stream in library
+                               code; no RNG seeded from traced/round
+                               values.
+
+Suppression syntax (same line, or a comment-only line directly above)::
+
+    x = jax.device_put(v, s)  # reprolint: disable=RL003 reason=addressable-only path
+
+A ``reason=`` is mandatory; ``python -m tools.analysis --list-suppressions``
+enumerates every active suppression with its reason.
+"""
+from tools.analysis.engine import (Finding, Module, Project, Rule, RULES,
+                                   list_suppressions, run)
+
+__all__ = ["Finding", "Module", "Project", "Rule", "RULES",
+           "list_suppressions", "run"]

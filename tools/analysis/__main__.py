@@ -1,0 +1,71 @@
+"""CLI: ``python -m tools.analysis [paths...]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/internal error.  Output is one
+``path:line:RULE message`` per line — greppable, editor-clickable, and
+stable across runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.analysis import engine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="reprolint: repo-invariant static analysis "
+                    "(RL001-RL006; see tools/analysis/__init__.py)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests",
+                                                 "benchmarks"],
+                    help="files/directories to scan (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--root", default=None,
+                    help="repo root for relative paths (default: cwd)")
+    ap.add_argument("--only", default=None, metavar="RL001,RL003",
+                    help="comma-separated rule codes to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    ap.add_argument("--list-suppressions", action="store_true",
+                    help="enumerate every active suppression with its "
+                         "reason and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        engine._load_rules()
+        for code in sorted(engine.RULES):
+            r = engine.RULES[code]
+            print(f"{code}  {r.name}: {r.summary}")
+        return 0
+
+    paths = args.paths or ["src", "tests", "benchmarks"]
+
+    if args.list_suppressions:
+        sups = engine.list_suppressions(paths, root=args.root)
+        for s in sups:
+            rules = ",".join(s.rules)
+            print(f"{s.path}:{s.comment_line}:{rules} reason: {s.reason}")
+        print(f"{len(sups)} suppression(s)", file=sys.stderr)
+        return 0
+
+    only = None
+    if args.only:
+        only = [c.strip() for c in args.only.split(",") if c.strip()]
+        engine._load_rules()
+        unknown = [c for c in only if c not in engine.RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    findings, project = engine.run(paths, root=args.root, only=only)
+    for f in findings:
+        print(f.render())
+    n_mod = len(project.modules)
+    print(f"reprolint: {len(findings)} finding(s) in {n_mod} file(s)",
+          file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,175 @@
+"""Project-wide call-graph approximation for reachability rules.
+
+This is deliberately a *name-resolution* call graph, not a type-inferred
+one: functions are keyed by ``(module_dotted, qualname)`` and call edges
+are resolved through
+
+  * same-module function names,
+  * ``from repro.x import f`` / ``import repro.x as m`` + ``m.f(...)``,
+  * ``self.method(...)`` within a class, and
+  * ``self.attr = some_function`` indirection (the engine stores its
+    jitted steps on ``self``).
+
+That over-approximates (any same-named method merges) and
+under-approximates (no higher-order flow beyond the patterns above) —
+both are the right trade-off for a lint gate: RL003 only needs "can the
+prefetch worker thread reach a collective launch", and the repo's worker
+entry points (``Thread(target=...)``, ``.submit(tag, thunk)`` lambdas)
+are all first-order.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from tools.analysis.engine import Module, Project, dotted_name
+
+
+@dataclass
+class FuncInfo:
+    """One function/method definition with its resolved call edges."""
+
+    module: Module
+    qualname: str                      # "Class.method" or "func"
+    node: ast.AST                      # FunctionDef / AsyncFunctionDef / Lambda
+    calls: list[tuple[str, int]] = field(default_factory=list)
+    # (callee key or raw dotted name, call-site line)
+
+
+def _imports(module: Module) -> tuple[dict, dict]:
+    """(name -> source module dotted, alias -> module dotted)."""
+    from_imports: dict[str, str] = {}
+    mod_aliases: dict[str, str] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                from_imports[a.asname or a.name] = node.module
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                mod_aliases[a.asname or a.name.split(".")[0]] = a.name
+    return from_imports, mod_aliases
+
+
+class CallGraph:
+    """funcs: key ``module_dotted::qualname`` -> FuncInfo."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.funcs: dict[str, FuncInfo] = {}
+        self.by_name: dict[str, list[str]] = {}   # bare name -> keys
+        self._module_imports: dict[str, tuple[dict, dict]] = {}
+        for m in project.modules:
+            self._index_module(m)
+        for key in list(self.funcs):
+            self._resolve_calls(key)
+
+    # -- indexing -------------------------------------------------------
+    def _mkey(self, module: Module) -> str:
+        return module.dotted or module.relpath
+
+    def _index_module(self, module: Module) -> None:
+        self._module_imports[self._mkey(module)] = _imports(module)
+
+        def visit(node: ast.AST, prefix: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}"
+                    key = f"{self._mkey(module)}::{qual}"
+                    self.funcs[key] = FuncInfo(module, qual, child)
+                    self.by_name.setdefault(child.name, []).append(key)
+                    visit(child, f"{qual}.")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, f"{prefix}{child.name}.")
+                else:
+                    visit(child, prefix)
+
+        visit(module.tree, "")
+
+        # self.attr = <function name>  indirection: alias attr -> function
+        self.self_attrs: dict[str, dict[str, str]] = getattr(
+            self, "self_attrs", {})
+        attrs = self.self_attrs.setdefault(self._mkey(module), {})
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                        and isinstance(node.value, ast.Name)):
+                    attrs[t.attr] = node.value.id
+
+    # -- edge resolution ------------------------------------------------
+    def resolve(self, module: Module, name: str) -> Optional[str]:
+        """Map a call-site dotted name to a FuncInfo key, if we can."""
+        mkey = self._mkey(module)
+        from_imports, mod_aliases = self._module_imports[mkey]
+        head, _, rest = name.partition(".")
+
+        if head == "self":
+            attr = rest.split(".")[0] if rest else ""
+            # method on any class in this module
+            for key in self.by_name.get(attr, []):
+                if key.startswith(f"{mkey}::"):
+                    return key
+            # self.attr = fn indirection
+            target = self.self_attrs.get(mkey, {}).get(attr)
+            if target:
+                return self.resolve(module, target)
+            return None
+
+        if not rest:
+            # plain name: same module, then from-imports
+            for key in self.by_name.get(head, []):
+                if key.startswith(f"{mkey}::"):
+                    return key
+            src = from_imports.get(head)
+            if src:
+                for key in self.by_name.get(head, []):
+                    if key.startswith(f"{src}::"):
+                        return key
+            return None
+
+        # module-attribute call: m.f(...) via `import pkg.m as m` or
+        # `from pkg import m` (m is then the submodule pkg.m)
+        src = mod_aliases.get(head)
+        cand_mods = [src] if src else []
+        sub = from_imports.get(head)
+        if sub:
+            cand_mods.append(f"{sub}.{head}")
+        fn = rest.split(".")[0]
+        for cm in cand_mods:
+            for key in self.by_name.get(fn, []):
+                if key.startswith(f"{cm}::"):
+                    return key
+        return None
+
+    def _resolve_calls(self, key: str) -> None:
+        info = self.funcs[key]
+        body = info.node.body if not isinstance(info.node, ast.Lambda) \
+            else [info.node.body]
+        for stmt in body:
+            for n in ast.walk(stmt if isinstance(stmt, ast.AST) else stmt):
+                if not isinstance(n, ast.Call):
+                    continue
+                name = dotted_name(n.func)
+                if not name:
+                    continue
+                target = self.resolve(info.module, name)
+                info.calls.append((target or name, n.lineno))
+
+    # -- reachability ---------------------------------------------------
+    def reachable(self, start_keys: Iterable[str]
+                  ) -> dict[str, tuple[str, ...]]:
+        """BFS: reached key -> chain of keys from an entry (inclusive)."""
+        seen: dict[str, tuple[str, ...]] = {}
+        frontier = [(k, (k,)) for k in start_keys if k in self.funcs]
+        while frontier:
+            key, chain = frontier.pop(0)
+            if key in seen:
+                continue
+            seen[key] = chain
+            for callee, _line in self.funcs[key].calls:
+                if callee in self.funcs and callee not in seen:
+                    frontier.append((callee, chain + (callee,)))
+        return seen

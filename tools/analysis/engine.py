@@ -1,0 +1,307 @@
+"""The reprolint engine: file walker, rule registry, suppressions, output.
+
+Design goals, in order:
+
+  * findings are machine-readable (``path:line:RULE message``, one per
+    line, stable ordering) and the process exit code is the gate — 0
+    clean, 1 findings, 2 usage/parse trouble;
+  * every suppression is *explained*: ``# reprolint: disable=RLxxx
+    reason=...`` without a reason is itself a finding (RL000), and
+    ``--list-suppressions`` enumerates the allowlist so review can audit
+    it in one place;
+  * rules see the whole project (parsed modules + source lines), so
+    cross-module analyses (the RL003 worker-thread call graph) are
+    first-class, not bolted on.
+
+Rules register themselves via :func:`register`; importing
+``tools.analysis.rules`` pulls in the standard set.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional
+
+BAD_SUPPRESSION = "RL000"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9,]+)"
+    r"(?:\s+reason=(?P<reason>.+?))?\s*$")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str          # posix path relative to the project root
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.rule} {self.message}"
+
+
+@dataclass(frozen=True)
+class Suppression:
+    """A ``# reprolint: disable=`` comment: ``line`` is the line whose
+    findings it silences (the comment's own line, or the next line when
+    the comment stands alone)."""
+
+    path: str
+    line: int
+    rules: tuple[str, ...]
+    reason: str
+    comment_line: int
+
+    def matches(self, f: Finding) -> bool:
+        return (f.path == self.path and f.line == self.line
+                and f.rule in self.rules)
+
+
+@dataclass
+class Module:
+    """One parsed source file plus everything rules need to know about
+    where it sits in the repo layout."""
+
+    path: Path
+    relpath: str                      # posix, relative to the root
+    tree: ast.Module
+    lines: list[str]
+    suppressions: list[Suppression] = field(default_factory=list)
+
+    # -- layout roles ---------------------------------------------------
+    @property
+    def is_compat(self) -> bool:
+        return self.relpath.endswith("src/repro/compat.py") or \
+            self.relpath == "src/repro/compat.py"
+
+    @property
+    def is_library(self) -> bool:
+        return "src/repro/" in self.relpath or \
+            self.relpath.startswith("src/repro")
+
+    @property
+    def is_tests(self) -> bool:
+        return self.relpath.startswith("tests/") or "/tests/" in self.relpath
+
+    @property
+    def dotted(self) -> Optional[str]:
+        """Import path for library modules (``repro.data.pipeline``)."""
+        marker = "src/repro/"
+        i = self.relpath.find(marker)
+        if i < 0:
+            return None
+        mod = self.relpath[i + len("src/"):]
+        mod = mod[:-len(".py")] if mod.endswith(".py") else mod
+        if mod.endswith("/__init__"):
+            mod = mod[:-len("/__init__")]
+        return mod.replace("/", ".")
+
+    def segment(self, node: ast.AST) -> str:
+        """Source text of ``node`` (empty string when unavailable)."""
+        try:
+            return ast.get_source_segment("\n".join(self.lines), node) or ""
+        except Exception:
+            return ""
+
+
+@dataclass
+class Project:
+    root: Path
+    modules: list[Module]
+
+    def module(self, relpath: str) -> Optional[Module]:
+        for m in self.modules:
+            if m.relpath == relpath:
+                return m
+        return None
+
+    @property
+    def library_modules(self) -> list[Module]:
+        return [m for m in self.modules if m.is_library]
+
+
+class Rule:
+    """Base class: subclasses set ``code``/``name``/``summary`` and
+    override one (or both) of the check hooks."""
+
+    code: str = ""
+    name: str = ""
+    summary: str = ""
+
+    def check_module(self, module: Module,
+                     project: Project) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register(rule_cls: type) -> type:
+    rule = rule_cls()
+    if not rule.code:
+        raise ValueError(f"rule {rule_cls.__name__} has no code")
+    RULES[rule.code] = rule
+    return rule_cls
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by most rules)
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def walk_calls(node: ast.AST) -> Iterable[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+# ---------------------------------------------------------------------------
+# suppression parsing
+# ---------------------------------------------------------------------------
+
+def _comment_tokens(src: str) -> tuple[dict[int, str], set[int]]:
+    """({line: comment text}, {lines that start a code token}).
+
+    Tokenized, not regexed over raw lines, so ``# reprolint:`` text
+    inside STRING literals (e.g. this repo's own checker-test fixture
+    corpus) is not mistaken for a live suppression."""
+    comments: dict[int, str] = {}
+    code_lines: set[int] = set()
+    skip = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+            tokenize.INDENT, tokenize.DEDENT, tokenize.ENDMARKER}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string
+            elif tok.type not in skip:
+                code_lines.add(tok.start[0])
+    except (tokenize.TokenError, IndentationError):
+        pass   # the ast parse already decided whether the file loads
+    return comments, code_lines
+
+
+def _parse_suppressions(relpath: str, src: str
+                        ) -> tuple[list[Suppression], list[Finding]]:
+    sups: list[Suppression] = []
+    bad: list[Finding] = []
+    comments, code_lines = _comment_tokens(src)
+    for i, comment in sorted(comments.items()):
+        m = _SUPPRESS_RE.search(comment)
+        if not m:
+            if "reprolint:" in comment and "disable" in comment:
+                bad.append(Finding(
+                    relpath, i, BAD_SUPPRESSION,
+                    "malformed suppression (expected '# reprolint: "
+                    "disable=RLxxx reason=...')"))
+            continue
+        rules = tuple(r for r in m.group(1).split(",") if r)
+        reason = (m.group("reason") or "").strip()
+        target = i if i in code_lines else i + 1
+        if not reason:
+            bad.append(Finding(
+                relpath, i, BAD_SUPPRESSION,
+                f"suppression of {','.join(rules)} has no reason= "
+                "(every allowlisted violation must be explained)"))
+            continue
+        sups.append(Suppression(relpath, target, rules, reason, i))
+    return sups, bad
+
+
+# ---------------------------------------------------------------------------
+# walking + running
+# ---------------------------------------------------------------------------
+
+def _iter_py_files(paths: Iterable[Path]) -> Iterable[Path]:
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                yield f
+
+
+def load_project(paths: Iterable[str], root: Optional[str] = None
+                 ) -> tuple[Project, list[Finding]]:
+    """Parse every .py under ``paths`` into a Project; parse failures
+    come back as RL000 findings (the gate must not silently skip an
+    unparseable file)."""
+    rootp = Path(root) if root else Path.cwd()
+    modules: list[Module] = []
+    errors: list[Finding] = []
+    for f in _iter_py_files(Path(p) for p in paths):
+        try:
+            rel = f.resolve().relative_to(rootp.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        src = f.read_text()
+        try:
+            tree = ast.parse(src, filename=str(f))
+        except SyntaxError as e:
+            errors.append(Finding(rel, e.lineno or 1, BAD_SUPPRESSION,
+                                  f"syntax error: {e.msg}"))
+            continue
+        lines = src.splitlines()
+        sups, bad = _parse_suppressions(rel, src)
+        errors.extend(bad)
+        modules.append(Module(path=f, relpath=rel, tree=tree, lines=lines,
+                              suppressions=sups))
+    return Project(rootp, modules), errors
+
+
+def _load_rules() -> None:
+    # importing the package registers the standard rule set exactly once
+    import tools.analysis.rules  # noqa: F401
+
+
+def run(paths: Iterable[str], root: Optional[str] = None,
+        only: Optional[Iterable[str]] = None
+        ) -> tuple[list[Finding], Project]:
+    """Run every registered rule (or just ``only``) over ``paths``.
+    Returns the post-suppression findings, sorted by location."""
+    _load_rules()
+    project, findings = load_project(paths, root)
+    selected = [RULES[c] for c in sorted(RULES)
+                if only is None or c in set(only)]
+    raw: list[Finding] = []
+    for rule in selected:
+        for module in project.modules:
+            raw.extend(rule.check_module(module, project))
+        raw.extend(rule.check_project(project))
+    sups = [s for m in project.modules for s in m.suppressions]
+    kept = [f for f in raw
+            if not any(s.matches(f) for s in sups)]
+    findings.extend(kept)
+    return sorted(set(findings)), project
+
+
+def list_suppressions(paths: Iterable[str], root: Optional[str] = None
+                      ) -> list[Suppression]:
+    project, _ = load_project(paths, root)
+    return sorted((s for m in project.modules for s in m.suppressions),
+                  key=lambda s: (s.path, s.comment_line))

@@ -1,0 +1,8 @@
+"""Standard reprolint rule set.  Importing this package registers every
+rule into :data:`tools.analysis.engine.RULES`."""
+from tools.analysis.rules import (compat_boundary, host_sync,
+                                  namedtuple_fields, prng_discipline,
+                                  process_zero, worker_collectives)
+
+__all__ = ["compat_boundary", "host_sync", "namedtuple_fields",
+           "prng_discipline", "process_zero", "worker_collectives"]

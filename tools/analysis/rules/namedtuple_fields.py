@@ -1,0 +1,81 @@
+"""RL005 — no positional construction of growing state NamedTuples.
+
+``SemiSFLState`` started at 5 fields and grew to 7 (PR 2 added ``step``
+for the cumulative LR schedule; PR 3 added round RNG plumbing).  Every
+``SemiSFLState(a, b, c, ...)`` positional construction silently pairs
+values with the wrong fields when someone inserts a field in the middle
+— the arrays even have compatible pytree structure, so nothing crashes;
+training just goes subtly wrong.  Keyword construction and ``._replace``
+are immune.
+
+The registry is structural: any library NamedTuple whose name ends in
+``State`` or that has >= 6 fields counts as "growing".  Small value
+tuples (caches, (init, update) pairs) stay positional-friendly.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.analysis.engine import Finding, Module, Project, Rule, register
+
+_MIN_FIELDS_ANY = 6      # any NamedTuple this wide is protected
+_MIN_FIELDS_STATE = 4    # *State tuples are protected sooner
+
+
+def _namedtuple_fields(cls: ast.ClassDef) -> list[str] | None:
+    if not any(isinstance(b, ast.Name) and b.id == "NamedTuple"
+               or isinstance(b, ast.Attribute) and b.attr == "NamedTuple"
+               for b in cls.bases):
+        return None
+    return [s.target.id for s in cls.body
+            if isinstance(s, ast.AnnAssign) and isinstance(s.target, ast.Name)]
+
+
+def _registry(project: Project) -> dict[str, int]:
+    reg: dict[str, int] = {}
+    for m in project.library_modules:
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.ClassDef):
+                fields = _namedtuple_fields(node)
+                if fields is None:
+                    continue
+                n = len(fields)
+                if n >= _MIN_FIELDS_ANY or (node.name.endswith("State")
+                                            and n >= _MIN_FIELDS_STATE):
+                    reg[node.name] = n
+    return reg
+
+
+@register
+class NamedTupleUnpacking(Rule):
+    code = "RL005"
+    name = "namedtuple-positional"
+    summary = ("fragile positional construction of growing state "
+               "NamedTuples (SemiSFLState and friends)")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        reg = _registry(project)
+        if not reg:
+            return
+        for m in project.modules:
+            if not (m.is_library or "benchmarks/" in m.relpath):
+                continue
+            for node in ast.walk(m.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = None
+                if isinstance(node.func, ast.Name):
+                    fname = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    fname = node.func.attr
+                if fname in reg and node.args:
+                    # skip the class definition context: NamedTuple
+                    # subclass __new__ etc. don't appear as plain calls
+                    yield Finding(
+                        m.relpath, node.lineno, self.code,
+                        f"positional construction of {fname} "
+                        f"({len(node.args)} positional args, class has "
+                        f"{reg[fname]} fields) — use keywords or "
+                        "._replace(); positional pairing breaks silently "
+                        "when the tuple grows")

@@ -1,0 +1,68 @@
+"""RL006 — PRNG discipline in library code.
+
+Two failure classes from the repo's history:
+
+  * the *global* ``np.random`` stream in library code makes results
+    depend on import order and on what any other module sampled first —
+    reproducibility dies quietly.  Library code must take an explicit
+    ``np.random.RandomState`` / ``Generator`` (or fork one locally).
+  * seeding a host RNG from a *device* value — PR 3's
+    ``RandomState(int(state.round))`` — forces a device sync per round
+    AND couples the host stream to traced state.  Round-derived
+    seeding must come from host-side counters.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.analysis.engine import (Finding, Module, Project, Rule,
+                                   dotted_name, register)
+
+# np.random.<lowercase fn>() = the global stream
+_GLOBAL_STREAM_HOSTS = {"np.random", "numpy.random", "onp.random"}
+
+_RNG_CTORS = {"RandomState", "default_rng", "Generator", "PRNGKey", "key"}
+
+_DEVICEY_ATTRS = {"round", "step"}
+
+
+@register
+class PrngDiscipline(Rule):
+    code = "RL006"
+    name = "prng-discipline"
+    summary = ("global np.random stream, or RNG seeded from traced/round "
+               "values, in library code")
+
+    def check_module(self, module: Module,
+                     project: Project) -> Iterable[Finding]:
+        if not module.is_library:
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if not name:
+                continue
+            host, _, leaf = name.rpartition(".")
+            if host in _GLOBAL_STREAM_HOSTS and leaf not in _RNG_CTORS \
+                    and leaf == leaf.lower():
+                yield Finding(
+                    module.relpath, node.lineno, self.code,
+                    f"'{name}' uses the process-global numpy RNG stream in "
+                    "library code — results now depend on import order; "
+                    "take an explicit RandomState/Generator")
+            elif leaf in _RNG_CTORS and node.args:
+                seed = node.args[0]
+                for n in ast.walk(seed):
+                    devicey = (isinstance(n, ast.Attribute)
+                               and n.attr in _DEVICEY_ATTRS)
+                    cast = (isinstance(n, ast.Call)
+                            and dotted_name(n.func) in ("int", "float"))
+                    if devicey or cast:
+                        yield Finding(
+                            module.relpath, node.lineno, self.code,
+                            f"'{name}' seeded from a traced/round value — "
+                            "forces a host sync per call (PR 3 regression); "
+                            "seed from a host-side counter instead")
+                        break

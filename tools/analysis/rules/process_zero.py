@@ -1,0 +1,117 @@
+"""RL004 — host side effects in multi-process paths need a process-0 guard.
+
+With ``jax.distributed`` initialised, every process runs the same round
+loop.  A checkpoint save or metrics-file write that is not guarded by a
+``jax.process_index() == 0`` (or ``is_main``-style) check makes N
+processes race on the same file — corrupting checkpoints on shared
+filesystems and interleaving log lines.
+
+Scope: modules that are actually multi-process-aware (they reference
+``jax.distributed`` / ``process_index`` / ``spawn_local``).  Single-
+process utility modules like ``checkpoint/io.py`` stay out of scope —
+the *callers* in launch code are where the guard belongs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.analysis.engine import (Finding, Module, Project, Rule,
+                                   dotted_name, register)
+
+# write-side-effect call patterns (by trailing name)
+_EFFECTS = {"save_state", "save_checkpoint", "write_text", "write_bytes",
+            "savez", "savez_compressed", "dump", "to_csv"}
+
+_GUARD_TOKENS = ("process_index", "is_main", "is_primary", "rank0",
+                 "is_coordinator")
+
+
+def _mentions_guard(src: str) -> bool:
+    return any(t in src for t in _GUARD_TOKENS)
+
+
+def _is_effect(call: ast.Call) -> Optional[str]:
+    name = dotted_name(call.func)
+    if not name:
+        return None
+    last = name.rsplit(".", 1)[-1]
+    if last in _EFFECTS:
+        return name
+    if last == "open":
+        for a in list(call.args[1:2]) + [kw.value for kw in call.keywords
+                                         if kw.arg == "mode"]:
+            if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                    and any(m in a.value for m in "wax"):
+                return name
+    return None
+
+
+class _GuardVisitor(ast.NodeVisitor):
+    """Walks a function tracking whether we're under a process-0 guard:
+    either inside `if <guard>:` or after `if <not guard>: return`."""
+
+    def __init__(self, module: Module, rule: ProcessZeroSideEffects):
+        self.module = module
+        self.rule = rule
+        self.guard_depth = 0
+        self.findings: list[Finding] = []
+
+    def _test_src(self, node: ast.If) -> str:
+        return self.module.segment(node.test) or ast.dump(node.test)
+
+    def visit_If(self, node: ast.If) -> None:
+        guarded = _mentions_guard(self._test_src(node))
+        if guarded:
+            self.guard_depth += 1
+        for n in node.body:
+            self.visit(n)
+        if guarded:
+            self.guard_depth -= 1
+        for n in node.orelse:
+            self.visit(n)
+
+    def visit_FunctionDef(self, node) -> None:
+        # an early `if <guard-ish>: return` guards the remainder
+        saved = self.guard_depth
+        for stmt in node.body:
+            if (isinstance(stmt, ast.If)
+                    and _mentions_guard(self._test_src(stmt))
+                    and any(isinstance(s, ast.Return) for s in stmt.body)):
+                self.visit(stmt)
+                self.guard_depth += 1
+            else:
+                self.visit(stmt)
+        self.guard_depth = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        effect = _is_effect(node)
+        if effect and self.guard_depth == 0:
+            self.findings.append(Finding(
+                self.module.relpath, node.lineno, self.rule.code,
+                f"'{effect}' in a multi-process module without a "
+                "process-0 guard — N processes will race on the write; "
+                "wrap in `if jax.process_index() == 0:`"))
+        self.generic_visit(node)
+
+
+@register
+class ProcessZeroSideEffects(Rule):
+    code = "RL004"
+    name = "process-0-side-effects"
+    summary = ("checkpoint/log writes unguarded by a process-index check "
+               "in multi-process code paths")
+
+    def check_module(self, module: Module,
+                     project: Project) -> Iterable[Finding]:
+        if not module.is_library:
+            return
+        src = "\n".join(module.lines)
+        if not ("jax.distributed" in src or "process_index" in src
+                or "spawn_local" in src):
+            return
+        v = _GuardVisitor(module, self)
+        v.visit(module.tree)
+        yield from v.findings

@@ -1,0 +1,124 @@
+"""RL003 — no collective launches reachable from a worker thread.
+
+PR 5's war story: ``jax.device_put`` onto a non-addressable (cross-pod)
+sharding internally runs a ``multihost_utils.assert_equal``-style psum.
+When the prefetch worker thread issued it, the collective interleaved
+with main-thread collectives and the whole Gloo fleet crashed with
+"Connection closed by peer" — nondeterministically, minutes in.
+
+The invariant: every function reachable from a ``Prefetcher`` worker
+entry point (``Thread(target=...)`` targets and the thunks handed to
+``.submit(tag, thunk)``) must be collective-free.  Device transfers that
+ARE safe off-thread (``device_put`` onto fully-addressable single-process
+shardings) carry an explicit suppression with the reason, so every
+exception is enumerable.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.analysis.engine import (Finding, Project, Rule, dotted_name,
+                                   register)
+from tools.analysis.callgraph import CallGraph
+
+_SINKS = ("device_put", "multihost_utils", "process_allgather",
+          "broadcast_one_to_all", "sync_global_devices", "assert_equal",
+          "psum", "all_gather", "make_array_from_callback")
+
+
+def _is_sink(name: str) -> bool:
+    last = name.rsplit(".", 1)[-1]
+    return last in _SINKS or "multihost_utils" in name
+
+
+def _sink_sites(cg: CallGraph, key: str) -> list[tuple[str, int]]:
+    """(sink name, line) for raw collective calls inside function `key`."""
+    sites = []
+    for callee, line in cg.funcs[key].calls:
+        if "::" not in callee and _is_sink(callee):
+            sites.append((callee, line))
+    return sites
+
+
+@register
+class WorkerThreadCollectives(Rule):
+    code = "RL003"
+    name = "worker-thread-collective-safety"
+    summary = ("collective-launching APIs (device_put onto shardings, "
+               "multihost_utils) reachable from prefetch worker threads")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        cg = CallGraph(project)
+
+        # --- worker entry points -------------------------------------
+        entries: list[tuple[str, str]] = []       # (key, how)
+        lambda_entries: list[tuple[object, object, str]] = []
+        for module in project.library_modules:
+            for node in ast.walk(module.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                cname = dotted_name(node.func) or ""
+                # Thread(target=self._loop)
+                if cname.rsplit(".", 1)[-1] == "Thread":
+                    for kw in node.keywords:
+                        if kw.arg == "target":
+                            tname = dotted_name(kw.value)
+                            if tname:
+                                key = cg.resolve(module, tname)
+                                if key:
+                                    entries.append(
+                                        (key, f"Thread(target={tname})"))
+                # pool.submit(tag, thunk) / submit(thunk)
+                elif cname.rsplit(".", 1)[-1] == "submit":
+                    for arg in node.args:
+                        if isinstance(arg, ast.Lambda):
+                            lambda_entries.append(
+                                (module, arg, "submit(lambda)"))
+                        else:
+                            tname = dotted_name(arg)
+                            if tname:
+                                key = cg.resolve(module, tname)
+                                if key:
+                                    entries.append(
+                                        (key, f"submit({tname})"))
+
+        # lambdas submitted to the worker: their call sites are edges
+        start_keys = [k for k, _ in entries]
+        how = dict(entries)
+        for module, lam, label in lambda_entries:
+            for n in ast.walk(lam.body):
+                if isinstance(n, ast.Call):
+                    name = dotted_name(n.func)
+                    if not name:
+                        continue
+                    if _is_sink(name):
+                        yield Finding(
+                            module.relpath, n.lineno, self.code,
+                            f"'{name}' called directly in a worker-submitted "
+                            "lambda — collectives must stay on the main "
+                            "thread")
+                        continue
+                    key = cg.resolve(module, name)
+                    if key and key not in how:
+                        start_keys.append(key)
+                        how[key] = f"{label} -> {name}"
+
+        # --- reachability to sinks -----------------------------------
+        # one finding per sink call site, via the SHORTEST chain (the
+        # same sink is often reachable through several paths)
+        best: dict[tuple[str, int, str], tuple[tuple[str, ...], str]] = {}
+        reached = cg.reachable(start_keys)
+        for key, chain in sorted(reached.items()):
+            for sink, line in _sink_sites(cg, key):
+                info = cg.funcs[key]
+                site = (info.module.relpath, line, sink)
+                if site not in best or len(chain) < len(best[site][0]):
+                    best[site] = (chain, how.get(chain[0], chain[0]))
+        for (relpath, line, sink), (chain, entry) in sorted(best.items()):
+            path = " -> ".join(k.split("::")[1] for k in chain)
+            yield Finding(
+                relpath, line, self.code,
+                f"'{sink}' is reachable from worker entry {entry} "
+                f"(call chain: {path}) — collectives launched off the "
+                "main thread crash multi-process fleets")
