@@ -12,6 +12,8 @@ from repro.configs import smoke_config
 from repro.core.baselines import BASELINES, make_fedswitch_sl
 from repro.core.commcost import CostModel, round_bill, tree_bytes
 from repro.core.engine import SemiSFLSystem, make_controller
+from repro.core.split import feature_shape
+from repro.core.wire import parse_wire_format
 from repro.data import (Loader, client_loaders, dirichlet_partition,
                         make_image_dataset, train_test_split,
                         uniform_partition)
@@ -83,23 +85,28 @@ def make_rig(*, arch="paper-cnn", n_labeled=100, n_total=2400, n_test=300,
 
 
 def build_system(method: str, cfg, n_active: int, scan_rounds=None,
-                 mesh=None, prefetch=None):
+                 mesh=None, prefetch=None, wire=None):
     if method == "semisfl":
         return SemiSFLSystem(cfg, n_clients_per_round=n_active,
                              scan_rounds=scan_rounds, mesh=mesh,
-                             prefetch=prefetch)
+                             prefetch=prefetch, wire_format=wire)
     if method == "fedswitch-sl":
         return make_fedswitch_sl(cfg, n_clients_per_round=n_active,
                                  scan_rounds=scan_rounds, mesh=mesh,
-                                 prefetch=prefetch)
+                                 prefetch=prefetch, wire_format=wire)
+    if wire is not None and not parse_wire_format(wire).identity:
+        raise ValueError(f"wire format {wire!r} needs a split link; "
+                         f"{method!r} exchanges full models")
     return BASELINES[method](cfg, n_clients_per_round=n_active)
 
 
 def run_method(method: str, *, rounds: int = 20, n_active: int = 5,
                eval_every: int = 1, seed: int = 0, adapt: bool = True,
-               system=None, rig=None, rig_kw=None, log=None) -> BenchResult:
+               system=None, rig=None, rig_kw=None, log=None,
+               wire=None) -> BenchResult:
     cfg, train, test, lab, cls = rig or make_rig(seed=seed, **(rig_kw or {}))
-    sys_ = system or build_system(method, cfg, n_active)
+    wire_fmt = parse_wire_format(wire)
+    sys_ = system or build_system(method, cfg, n_active, wire=wire_fmt)
     state = sys_.init_state(seed)
     ctrl = make_controller(cfg, len(lab.idx), len(train.y)) if adapt else None
     if ctrl is None:
@@ -114,10 +121,11 @@ def run_method(method: str, *, rounds: int = 20, n_active: int = 5,
                                  if k in ("bottom", "top")})
     else:
         bottom_bytes = full_bytes = tree_bytes(params)
-    # feature batch bytes: split-layer activations for one client batch
-    hw, c = (cfg.image_size // 2, cfg.cnn_channels[0]) \
-        if cfg.arch_type == "cnn" else (1, cfg.d_model)
-    feat_bytes = 16 * hw * hw * c * 4
+    # feature batch bytes: the ACTUAL split-layer activation shape for one
+    # client batch (configured batch size, configured cut — not the
+    # historical batch-16 / first-conv-block assumption)
+    client_batch = cls[0].batch
+    feat_bytes = int(np.prod(feature_shape(cfg, client_batch))) * 4
     cost = CostModel(seed=seed)
 
     res = BenchResult(method=method)
@@ -137,7 +145,8 @@ def run_method(method: str, *, rounds: int = 20, n_active: int = 5,
                                  "fedmatch") else "split",
             cfg, bottom_bytes=bottom_bytes, full_bytes=full_bytes,
             feat_bytes_per_batch=feat_bytes, k_s=k_s_now,
-            k_u=cfg.semisfl.k_u, n_active=n_active, batch=16, cost=cost))
+            k_u=cfg.semisfl.k_u, n_active=n_active, batch=client_batch,
+            cost=cost, wire=wire_fmt))
         if r % eval_every == 0 or r == rounds - 1:
             acc = sys_.evaluate(state, test.x, test.y)
             if not isinstance(m, dict):

@@ -1,18 +1,34 @@
 """Fig. 6: network traffic to reach target accuracy (paper: ~70% reduction
 for split methods on large models; for the small CNN the paper itself notes
-feature traffic can exceed model traffic — Fig. 6(a))."""
+feature traffic can exceed model traffic — Fig. 6(a)), plus the
+accuracy-vs-traffic frontier of the compressed wire formats (the split-link
+payloads quantized/sparsified as real ops in the phase programs)."""
 from __future__ import annotations
+
+import jax
+import numpy as np
 
 from benchmarks.common import METHODS, run_method
 from repro.configs import get_config
-from repro.core.commcost import CostModel, round_bill
+from repro.core.commcost import CostModel, round_bill, tree_bytes
+from repro.core.split import feature_shape
+from repro.core.wire import parse_wire_format
+from repro.models import build_model
+
+VGG16_BATCH = 16         # client batch of the Fig. 6(d) paper-scale regime
+
+# the measured frontier: quantized activations/gradients, then composed
+# with a top-k sparsified FedAvg delta upload
+WIRE_SWEEP = ("int8", "fp8", "int8+topk0.05")
 
 
 def run(quick: bool = False, log=print) -> list[dict]:
     rounds = 10 if quick else 16
     rows = []
+    results = {}
     for method in METHODS:
         res = run_method(method, rounds=rounds, log=None)
+        results[method] = res
         secs, byts = res.cost_to_acc(0.65)
         rows.append({"benchmark": "fig6_comm", "method": method,
                      "target_acc": 0.65,
@@ -21,22 +37,52 @@ def run(quick: bool = False, log=print) -> list[dict]:
         log(f"[fig6] {method} to 65%: "
             f"{'never' if byts is None else f'{byts/1e9:.2f} GB (sim)'}")
 
+    # accuracy-vs-traffic frontier: the same SemiSFL run under compressed
+    # wire formats — real quantize ops in the phase programs, bills from
+    # the actual on-wire dtypes/sparsity
+    fp32_res = results["semisfl"]
+    fp32_bytes = sum(b.bytes_total for b in fp32_res.bills)
+    for wire in WIRE_SWEEP[:1] if quick else WIRE_SWEEP:
+        res_w = run_method("semisfl", rounds=rounds, log=None, wire=wire)
+        w_bytes = sum(b.bytes_total for b in res_w.bills)
+        red = 1.0 - w_bytes / max(fp32_bytes, 1.0)
+        rows.append({"benchmark": "fig6_wire_frontier", "method": "semisfl",
+                     "wire": wire, "rounds": rounds,
+                     "final_acc": round(res_w.final_acc, 4),
+                     "final_acc_fp32": round(fp32_res.final_acc, 4),
+                     "sim_MB": round(w_bytes / 1e6, 3),
+                     "sim_MB_fp32": round(fp32_bytes / 1e6, 3),
+                     "comm_reduction_frac": round(red, 4)})
+        log(f"[fig6/wire] semisfl {wire}: {w_bytes/1e6:.2f} MB vs "
+            f"{fp32_bytes/1e6:.2f} MB fp32 ({red:.1%} less), "
+            f"acc {res_w.final_acc:.3f} vs {fp32_res.final_acc:.3f}")
+
     # paper-scale extrapolation: same round counts, VGG16-sized tensors —
-    # reproduces the Fig. 6(d) regime where SFL wins decisively
+    # reproduces the Fig. 6(d) regime where SFL wins decisively.  Model
+    # and activation sizes come from the actual paper-vgg16 config (abstract
+    # init for the parameter trees, the model's own shape bookkeeping for
+    # the cut activation), not hardcoded tensor guesses.
     cfg16 = get_config("paper-vgg16")
-    n16 = cfg16.param_count()
-    bottom_frac = 0.07   # conv stack vs FC-heavy top (536 MB vs ~37 MB)
-    cost = CostModel(seed=1)
-    for method in METHODS:
-        res = next(r for r in rows if r["method"] == method)
-        kind = method if method in ("supervised-only", "semifl", "fedswitch",
-                                    "fedmatch") else "split"
-        bill = round_bill(kind, cfg16, bottom_bytes=int(n16 * 4 * bottom_frac),
-                          full_bytes=n16 * 4,
-                          feat_bytes_per_batch=16 * 9 * 9 * 512 * 4,
-                          k_s=15, k_u=4, n_active=5, batch=16, cost=cost)
-        rows.append({"benchmark": "fig6_comm_vgg16_scale", "method": method,
-                     "per_round_GB": round(bill.bytes_total / 1e9, 3)})
-        log(f"[fig6/vgg16-scale] {method}: {bill.bytes_total/1e9:.2f} "
-            f"GB/round (sim)")
+    abs16 = jax.eval_shape(build_model(cfg16).init, jax.random.PRNGKey(0))
+    bottom16 = tree_bytes(abs16["bottom"])
+    full16 = tree_bytes(abs16)
+    feat16 = int(np.prod(feature_shape(cfg16, VGG16_BATCH))) * 4
+    for wire in (None, "int8+topk0.05"):
+        wf = parse_wire_format(wire)
+        cost = CostModel(seed=1)
+        for method in METHODS:
+            if wire is not None and method != "semisfl":
+                continue
+            kind = method if method in ("supervised-only", "semifl",
+                                        "fedswitch", "fedmatch") else "split"
+            bill = round_bill(kind, cfg16, bottom_bytes=bottom16,
+                              full_bytes=full16, feat_bytes_per_batch=feat16,
+                              k_s=15, k_u=4, n_active=5, batch=VGG16_BATCH,
+                              cost=cost, wire=wf)
+            tag = "" if wire is None else f"+{wire}"
+            rows.append({"benchmark": "fig6_comm_vgg16_scale",
+                         "method": method + tag,
+                         "per_round_GB": round(bill.bytes_total / 1e9, 3)})
+            log(f"[fig6/vgg16-scale] {method}{tag}: "
+                f"{bill.bytes_total/1e9:.2f} GB/round (sim)")
     return rows

@@ -73,8 +73,10 @@ def run_smoke(out_dir: str) -> dict:
     controller, in seconds.  Writes BENCH_smoke.json with
     ``us_per_round_scanned`` / ``us_per_round_eager`` /
     ``us_per_round_sharded`` / ``us_per_round_prefetch`` (+
-    ``prefetch_overlap_frac``) so CI can gate executor regressions, and
-    the rolled-vs-unrolled scan-of-conv micro ratio the ROADMAP tracks."""
+    ``prefetch_overlap_frac``) so CI can gate executor regressions, the
+    compressed-wire bytes (``bytes_per_round_{fp32,int8}`` +
+    ``comm_reduction_frac``), and the rolled-vs-unrolled scan-of-conv
+    micro ratio the ROADMAP tracks."""
     from repro.kernels import dispatch
 
     from benchmarks.common import build_system, run_method
@@ -115,6 +117,23 @@ def run_smoke(out_dir: str) -> dict:
         if pf:
             pf_stats = sys_.prefetch_stats()
             sys_.close()
+    # wire-format entry: same rig, scanned executor, int8 split-link
+    # payloads + top-k FedAvg deltas as real ops in the phase programs.
+    # The bills then reflect actual on-wire dtypes/sparsity, so the smoke
+    # record carries the compression ratio CI gates on.
+    wire = "int8+topk0.05"
+    rig = _smoke_rig()
+    sys_w = build_system("semisfl", rig[0], n_active, scan_rounds=True,
+                         wire=wire)
+    run_method("semisfl", rounds=3, n_active=n_active, system=sys_w,
+               rig=rig, log=log, wire=wire)
+    t0 = time.time()
+    res_w = run_method("semisfl", rounds=rounds, n_active=n_active,
+                       eval_every=2, system=sys_w, rig=rig, log=log,
+                       wire=wire)
+    timings["int8"] = (time.time() - t0) * 1e6 / rounds
+    fp32_bpr = sum(b.bytes_total for b in res.bills) / rounds
+    int8_bpr = sum(b.bytes_total for b in res_w.bills) / rounds
     rec = {
         "benchmark": "smoke",
         "method": "semisfl",
@@ -136,6 +155,13 @@ def run_smoke(out_dir: str) -> dict:
                                   2),
         "prefetch_overlap_frac": round(pf_stats["overlap_frac"], 3),
         "prefetch_cancels": pf_stats["cancels"],
+        # compressed split link (int8 activations/gradients + top-k deltas)
+        "wire_format": wire,
+        "us_per_round_int8": round(timings["int8"]),
+        "final_acc_int8": round(res_w.final_acc, 4),
+        "bytes_per_round_fp32": round(fp32_bpr),
+        "bytes_per_round_int8": round(int8_bpr),
+        "comm_reduction_frac": round(1.0 - int8_bpr / fp32_bpr, 4),
         "shard_devices": mesh.shape["data"],
         "kernel_backend": dispatch.resolve(),
         "jax_version": __import__("jax").__version__,

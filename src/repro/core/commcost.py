@@ -2,25 +2,30 @@
 
 The paper measures time on 80 Jetson clients + an A6000 server over Wi-Fi
 (0.8-8 Mbps up, 10-20 Mbps down).  We reproduce the *accounting*: per-round
-bytes from actual parameter/feature tensor sizes, per-round seconds from a
-link model with the paper's bandwidth ranges plus FLOP-rate compute terms.
-Benchmarks multiply these by measured rounds-to-target-accuracy to
+bytes from actual parameter/feature tensor sizes — at their actual on-wire
+dtypes, with quantization/sparsification from a :class:`~repro.core.wire.
+WireFormat` applied to the split-link payloads — and per-round seconds from
+a link model with the paper's bandwidth ranges plus FLOP-rate compute
+terms.  Benchmarks multiply these by measured rounds-to-target-accuracy to
 reproduce Fig. 5 (time) and Fig. 6 (traffic).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
-
-BYTES_PER_PARAM = 4  # fp32 on the wire, as in the paper's PyTorch rig
+from repro.core.wire import (WireFormat, quantized_bytes,
+                             topk_payload_bytes)
 
 
 def tree_bytes(tree) -> int:
-    return sum(int(np.prod(x.shape)) * BYTES_PER_PARAM
+    """Serialized bytes of a parameter tree at its leaves' actual dtypes
+    (fp32 trees bill exactly as the historical 4-bytes-per-param)."""
+    return sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
                for x in jax.tree.leaves(tree))
 
 
@@ -37,11 +42,18 @@ class CostModel:
     seed: int = 0
 
     def __post_init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind the link-draw stream to the seed: two ``CostModel``s with
+        the same seed (or one reset between sweeps) produce identical
+        per-round bills — the reproducibility seam ``round_bill`` uses."""
         self._rng = np.random.RandomState(self.seed)
 
-    def _link(self, rng) -> tuple[float, float]:
-        up = rng.uniform(*self.up_mbps) * 1e6 / 8     # bytes/s
-        down = rng.uniform(*self.down_mbps) * 1e6 / 8
+    def link(self) -> tuple[float, float]:
+        """One (up, down) bytes/s draw from this model's own RNG stream."""
+        up = self._rng.uniform(*self.up_mbps) * 1e6 / 8
+        down = self._rng.uniform(*self.down_mbps) * 1e6 / 8
         return up, down
 
 
@@ -76,9 +88,19 @@ def _flops_per_sample(cfg: ArchConfig) -> float:
 def round_bill(method: str, cfg: ArchConfig, *, bottom_bytes: int,
                full_bytes: int, feat_bytes_per_batch: int, k_s: int, k_u: int,
                n_active: int, batch: int, cost: CostModel,
-               helpers: int = 2) -> RoundBill:
-    """Bytes and seconds for one aggregation round of ``method``."""
-    rng = cost._rng
+               helpers: int = 2,
+               wire: Optional[WireFormat] = None) -> RoundBill:
+    """Bytes and seconds for one aggregation round of ``method``.
+
+    ``bottom_bytes`` / ``full_bytes`` / ``feat_bytes_per_batch`` are the
+    *fp32 serialized* sizes (``tree_bytes`` on fp32 trees); ``wire``
+    rescales the split-link payloads to their on-wire format — quantized
+    activations/gradients bill element bytes + one fp32 scale per shipped
+    tensor, top-k'd FedAvg deltas bill value+index pairs for the kept
+    entries.  Full-model baselines exchange whole models and are
+    unaffected.  Link draws come from ``cost.link()`` (the model's own
+    seeded stream): same seed + same call sequence -> same bills."""
+    wire = WireFormat() if wire is None else wire
     fwd = _flops_per_sample(cfg)
     server_s = k_s * 3 * fwd * batch / (cost.server_gflops * 1e9)
 
@@ -88,7 +110,7 @@ def round_bill(method: str, cfg: ArchConfig, *, bottom_bytes: int,
         up = full_bytes * n_active
         client_s = []
         for _ in range(n_active):
-            u, d = cost._link(rng)
+            u, d = cost.link()
             comp = k_u * 3 * fwd * batch / (cost.client_gflops * 1e9)
             client_s.append(down / n_active / d + up / n_active / u + comp)
         return RoundBill(up, down, server_s + max(client_s))
@@ -96,15 +118,23 @@ def round_bill(method: str, cfg: ArchConfig, *, bottom_bytes: int,
     if method == "supervised-only":
         return RoundBill(0.0, 0.0, server_s)
 
-    # split methods: semisfl / fedswitch-sl
+    # split methods: semisfl / fedswitch-sl.  Broadcast (step (2)) stays
+    # fp32; the uplink bottom is a top-k delta against that broadcast, the
+    # per-step feature/gradient payloads ship in the wire's formats (one
+    # tensor — hence one scale — per client per step per view).
+    bottom_elems = bottom_bytes // 4
+    feat_elems = feat_bytes_per_batch // 4
+    up_model_one = topk_payload_bytes(bottom_elems, wire.topk_frac)
+    feat_one = quantized_bytes(feat_elems, wire.activations)
+    grad_one = quantized_bytes(feat_elems, wire.gradients)
     down_models = 2 * bottom_bytes * n_active          # student + teacher
-    up_models = bottom_bytes * n_active
-    feat_up = 2 * feat_bytes_per_batch * k_u * n_active  # student + teacher
-    grad_down = feat_bytes_per_batch * k_u * n_active
+    up_models = up_model_one * n_active
+    feat_up = 2 * feat_one * k_u * n_active            # student + teacher
+    grad_down = grad_one * k_u * n_active
     client_s = []
     bottom_frac = bottom_bytes / max(full_bytes, 1)
     for _ in range(n_active):
-        u, d = cost._link(rng)
+        u, d = cost.link()
         comp = k_u * 3 * fwd * bottom_frac * batch / (cost.client_gflops * 1e9)
         comm = ((down_models + grad_down) / n_active / d
                 + (up_models + feat_up) / n_active / u)

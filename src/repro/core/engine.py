@@ -48,6 +48,8 @@ from repro.core.queue import FeatureQueue, enqueue, init_queue
 from repro.core.scan import scan_phase, sharded_scan_phase
 from repro.core.split import (apply_projection_head, init_projection_head,
                               pool_features)
+from repro.core.wire import (WireFormatLike, fake_quantize, parse_wire_format,
+                             quantize_grad, resolve_fmt, sparse_delta_mean)
 from repro.data.augment import strong_augment, weak_augment
 from repro.data.pipeline import (Loader, PodClients, select_pod_blocked,
                                  stack_client_batches,
@@ -137,8 +139,12 @@ class SemiSFLSystem:
                  scan_rounds: Optional[bool] = None,
                  mesh=None,
                  shard_clients: Optional[bool] = None,
-                 prefetch: Optional[bool] = None):
+                 prefetch: Optional[bool] = None,
+                 wire_format: WireFormatLike = None):
         self.cfg = cfg
+        # split-link wire format: identity (default) inserts NO ops — the
+        # compiled phase programs are bit-for-bit the uncompressed ones
+        self.wire = parse_wire_format(wire_format)
         self.s = cfg.semisfl
         self.model = build_model(cfg)
         self.n_active = n_clients_per_round
@@ -330,6 +336,10 @@ class SemiSFLSystem:
         #         teacher, queue, rng, step) — everything the phase mutates
         # plus the frozen teacher top/proj, so lax.scan threads it all
         # on-device.
+        # wire-format gates, resolved at trace time: None inserts no op
+        act_fmt = resolve_fmt(self.wire.activations)
+        grad_fmt = resolve_fmt(self.wire.gradients)
+
         def t_bottom(pb, x):
             feats, _, _ = self.model.bottom_apply(pb, {"images": x},
                                                   mode="eval")
@@ -346,6 +356,12 @@ class SemiSFLSystem:
             the sharded executor's local block equals the vmapped
             executor's corresponding rows."""
             t_feats = jax.vmap(t_bottom)(client_teacher_bottoms, xw)
+            if act_fmt is not None:
+                # uplink: each client's teacher-view features cross the
+                # split link quantized (one amax scale per client tensor —
+                # per-client, so sharded == vmapped exactly)
+                t_feats = jax.vmap(
+                    lambda t: fake_quantize(t, act_fmt))(t_feats)
             t_feats_flat = t_feats.reshape((-1,) + t_feats.shape[2:])
             t_out, _ = self.model.top_apply(
                 teacher["top"], t_feats_flat,
@@ -360,6 +376,14 @@ class SemiSFLSystem:
 
         def student_forward(bottoms, top, xs, dropout_keys):
             feats = jax.vmap(s_bottom)(bottoms, xs)
+            if act_fmt is not None:
+                # uplink: quantized student features, straight-through
+                # gradient (the server computes on what it received)
+                feats = jax.vmap(lambda t: fake_quantize(t, act_fmt))(feats)
+            if grad_fmt is not None:
+                # downlink: the cotangent at the cut — what the PS ships
+                # back to each client — is quantized in the backward pass
+                feats = jax.vmap(lambda t: quantize_grad(t, grad_fmt))(feats)
             feats_flat = feats.reshape((-1,) + feats.shape[2:])
             out, _ = self.model.top_apply(
                 top, feats_flat,
@@ -424,6 +448,18 @@ class SemiSFLSystem:
 
         self.semi_step = jax.jit(semi_step)
         self.semi_phase = scan_phase(semi_step)
+
+        # ------- step (5) with top-k sparsified bottom deltas --------------
+        # Each client uploads the top-frac entries of its delta against the
+        # broadcast reference; FedAvg reconstructs reference + mean(deltas).
+        # Only built when the wire asks for it — the identity wire keeps
+        # the exact historical aggregate programs.
+        topk_frac = self.wire.topk_frac
+        if topk_frac < 1.0:
+            def aggregate_topk(bottoms, t_bottoms, ref_b, ref_t):
+                return (sparse_delta_mean(bottoms, ref_b, topk_frac),
+                        sparse_delta_mean(t_bottoms, ref_t, topk_frac))
+            self._aggregate_topk = jax.jit(aggregate_topk)
 
         # ------------- client-sharded cross-entity step --------------------
         # Same mathematics as semi_step, reorganized for shard_map: the
@@ -614,6 +650,18 @@ class SemiSFLSystem:
             _broadcast, out_shardings=(stacked_sh, stacked_sh))
         self._aggregate_sharded = jax.jit(
             _aggregate, out_shardings=(rep_sh, rep_sh))
+        if self.wire.topk_frac < 1.0:
+            frac = self.wire.topk_frac
+
+            def _aggregate_topk(bottoms, t_bottoms, ref_b, ref_t):
+                # per-client top-k is collective-free on the client-sharded
+                # stack; the delta mean is the same one all-reduce FedAvg
+                # compiles to
+                return (sparse_delta_mean(bottoms, ref_b, frac),
+                        sparse_delta_mean(t_bottoms, ref_t, frac))
+
+            self._aggregate_sharded_topk = jax.jit(
+                _aggregate_topk, out_shardings=(rep_sh, rep_sh))
 
     # ------------------------------------------------------------------
     # round driver
@@ -883,9 +931,24 @@ class SemiSFLSystem:
         # (5) aggregate — the global bottom AND the teacher bottom: the
         # EMA-updated client teacher bottoms (Eq. (8)) are FedAvg'd into
         # w~_c so `evaluate(use_teacher=True)` sees the cross-entity phase.
+        # With a top-k wire, clients upload sparsified deltas against the
+        # broadcast references: state.params["bottom"] is not in the phase
+        # carry (so it survives donation), and the carry-returned teacher's
+        # bottom is threaded through the phase unchanged — both ARE the
+        # broadcast-time values.
+        sparse = self.wire.topk_frac < 1.0
         if self._use_sharded:
-            agg_bottom, agg_t_bottom = self._aggregate_sharded(bottoms,
-                                                               t_bottoms)
+            if sparse:
+                agg_bottom, agg_t_bottom = self._aggregate_sharded_topk(
+                    bottoms, t_bottoms, state.params["bottom"],
+                    teacher["bottom"])
+            else:
+                agg_bottom, agg_t_bottom = self._aggregate_sharded(bottoms,
+                                                                   t_bottoms)
+        elif sparse:
+            agg_bottom, agg_t_bottom = self._aggregate_topk(
+                bottoms, t_bottoms, state.params["bottom"],
+                teacher["bottom"])
         else:
             agg_bottom = self.aggregate(bottoms)
             agg_t_bottom = self.aggregate(t_bottoms)

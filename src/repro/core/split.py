@@ -25,6 +25,26 @@ def feature_dim(cfg: ArchConfig) -> int:
     return cfg.d_model
 
 
+def feature_shape(cfg: ArchConfig, batch: int,
+                  seq_len: int | None = None) -> tuple[int, ...]:
+    """Actual shape of one split-layer activation batch on the wire.
+
+    This is what a client ships per step — ``(B, H', W', C)`` conv maps at
+    the cut for the CNN family (pooling included, via the model's own
+    shape bookkeeping), ``(B, S, d_model)`` for sequence archs.  The
+    benchmark harnesses derive their per-batch feature bytes from this
+    instead of hardcoding batch/cut assumptions."""
+    if cfg.arch_type == "cnn":
+        from repro.models.cnn import CNNModel
+        model = CNNModel(cfg)
+        hw, c = model._feat_shape(model.split)
+        return (batch, hw, hw, c)
+    if seq_len is None:
+        raise ValueError("feature_shape needs seq_len= for sequence archs "
+                         "(the cut activation is (B, S, d_model))")
+    return (batch, seq_len, cfg.d_model)
+
+
 def pool_features(cfg: ArchConfig, feats: Array) -> Array:
     """(B, ... , d) split-layer activations -> (B, feature_dim)."""
     if feats.ndim == 4:          # CNN maps (B, H, W, C)

@@ -1,0 +1,199 @@
+"""Wire formats for the split link (the paper's Section V-C traffic story).
+
+SemiSFL's per-round traffic is dominated by the split-link payloads: the
+Eq. (5)/(8) activation uplink (client bottom features, student + teacher
+views), the gradient downlink (d loss / d features at the cut), and the
+FedAvg bottom upload.  This module makes compression of those payloads a
+*real* part of the phase programs — the dispatched
+``kernels.quantize_dequantize`` round trip runs inside the compiled steps —
+and gives ``core.commcost`` the byte math to bill what is actually on the
+wire:
+
+  * activations   int8/fp8 per-tensor-scaled fake quantization with a
+                  straight-through estimator (the uplink carries quantized
+                  features; the gradient passes through unchanged);
+  * gradients     identity forward, quantized backward — the cotangent at
+                  the cut is what the PS ships back to each client;
+  * bottom deltas top-k magnitude sparsification of each client's delta
+                  against the broadcast reference before FedAvg.
+
+``WireFormat(activations="fp32", gradients="fp32", topk_frac=1.0)`` is the
+identity: every op is gated at trace time, so the compiled programs are
+bit-for-bit the uncompressed ones."""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quantize_dequantize
+
+Array = jax.Array
+
+# on-wire bytes per element for each quantized payload format
+WIRE_DTYPES = {"fp32": 4, "int8": 1, "fp8": 1}
+SCALE_BYTES = 4   # one fp32 amax scale rides along per quantized tensor
+VALUE_BYTES = 4   # surviving top-k entries ship as fp32 values...
+INDEX_BYTES = 4   # ...plus an int32 flat coordinate each
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """What the split-link payloads look like on the wire."""
+    activations: str = "fp32"   # uplink features (student + teacher views)
+    gradients: str = "fp32"     # downlink cotangent at the cut
+    topk_frac: float = 1.0      # kept fraction of each FedAvg bottom delta
+
+    def __post_init__(self):
+        for kind, fmt in (("activations", self.activations),
+                          ("gradients", self.gradients)):
+            if fmt not in WIRE_DTYPES:
+                raise ValueError(
+                    f"unknown {kind} wire format {fmt!r}; "
+                    f"valid: {', '.join(sorted(WIRE_DTYPES))}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(
+                f"topk_frac must be in (0, 1], got {self.topk_frac}")
+
+    @property
+    def identity(self) -> bool:
+        """True when every payload is uncompressed fp32 (no-op wire)."""
+        return (self.activations == "fp32" and self.gradients == "fp32"
+                and self.topk_frac >= 1.0)
+
+
+FP32 = WireFormat()
+
+WireFormatLike = Union[WireFormat, str, None]
+
+
+def parse_wire_format(spec: WireFormatLike) -> WireFormat:
+    """CLI/ctor spellings -> :class:`WireFormat`.
+
+    ``None``/``"fp32"`` -> identity; ``"int8"`` / ``"fp8"`` quantize both
+    activations and gradients; a ``"topkF"`` component (F a fraction, e.g.
+    ``"topk0.1"``) sparsifies the FedAvg deltas and composes with ``+``:
+    ``"int8+topk0.1"``."""
+    if isinstance(spec, WireFormat):
+        return spec
+    if spec is None:
+        return FP32
+    fmt, frac = "fp32", 1.0
+    for part in str(spec).lower().split("+"):
+        part = part.strip()
+        if not part:
+            continue
+        if part.startswith("topk"):
+            try:
+                frac = float(part[4:])
+            except ValueError:
+                raise ValueError(
+                    f"bad top-k fraction in wire format component "
+                    f"{part!r} (want e.g. 'topk0.1')") from None
+        elif part in WIRE_DTYPES:
+            fmt = part
+        else:
+            raise ValueError(
+                f"unknown wire format component {part!r} in {spec!r}; "
+                f"valid: {', '.join(sorted(WIRE_DTYPES))} and 'topkF'")
+    return WireFormat(activations=fmt, gradients=fmt, topk_frac=frac)
+
+
+# ---------------------------------------------------------------------------
+# phase-program ops (built on the dispatched quantize kernel)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quantize(x: Array, fmt: str) -> Array:
+    """Quantize-dequantize ``x`` on the forward pass; straight-through
+    estimator on the backward pass (the activation uplink is quantized,
+    its gradient is not re-quantized here — see :func:`quantize_grad`)."""
+    return quantize_dequantize(x, fmt)
+
+
+def _fq_fwd(x, fmt):
+    return quantize_dequantize(x, fmt), None
+
+
+def _fq_bwd(fmt, _res, g):
+    return (g,)
+
+
+fake_quantize.defvjp(_fq_fwd, _fq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_grad(x: Array, fmt: str) -> Array:
+    """Identity forward; the backward cotangent — the gradient the PS
+    ships down the split link — is quantize-dequantized through ``fmt``."""
+    return x
+
+
+def _qg_fwd(x, fmt):
+    return x, None
+
+
+def _qg_bwd(fmt, _res, g):
+    return (quantize_dequantize(g, fmt),)
+
+
+quantize_grad.defvjp(_qg_fwd, _qg_bwd)
+
+
+def topk_count(n: int, frac: float) -> int:
+    """Kept entries for an ``n``-element payload (static shape math)."""
+    return max(1, min(n, math.ceil(frac * n)))
+
+
+def topk_sparsify(x: Array, frac: float) -> Array:
+    """Zero all but the ``ceil(frac * size)`` largest-|.| entries of ``x``.
+
+    Magnitude ties at the threshold all survive (the kept count is a
+    billing bound, not a hard cap)."""
+    if frac >= 1.0:
+        return x
+    mag = jnp.abs(x.reshape(-1))
+    kth = jax.lax.top_k(mag, topk_count(mag.size, frac))[0][-1]
+    return jnp.where(jnp.abs(x) >= kth, x, jnp.zeros_like(x))
+
+
+def sparse_delta_mean(stacked, reference, frac: float):
+    """FedAvg over a stacked client axis from top-k sparsified deltas.
+
+    Each client uploads only the top ``frac`` of its delta against the
+    broadcast ``reference`` (per leaf); the server reconstructs
+    ``reference + mean(deltas)``.  Exact FedAvg at ``frac == 1``."""
+    def one(s, r):
+        deltas = jax.vmap(lambda d: topk_sparsify(d, frac))(s - r[None])
+        return r + deltas.mean(axis=0)
+    return jax.tree.map(one, stacked, reference)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (consumed by core.commcost)
+# ---------------------------------------------------------------------------
+
+def quantized_bytes(n_elems: float, fmt: str, *, n_tensors: int = 1) -> float:
+    """On-wire bytes for ``n_elems`` elements in ``fmt`` (+ one fp32 amax
+    scale per shipped tensor for the quantized formats)."""
+    if fmt == "fp32":
+        return 4.0 * n_elems
+    return float(WIRE_DTYPES[fmt]) * n_elems + SCALE_BYTES * n_tensors
+
+
+def topk_payload_bytes(n_elems: int, frac: float) -> float:
+    """On-wire bytes for a top-k sparsified ``n_elems`` payload: fp32
+    value + int32 flat index per kept entry."""
+    if frac >= 1.0:
+        return 4.0 * n_elems
+    return float(topk_count(n_elems, frac)) * (VALUE_BYTES + INDEX_BYTES)
+
+
+def resolve_fmt(fmt: str) -> Optional[str]:
+    """``"fp32"`` -> None (trace-time gate: no op is inserted), else the
+    format name for the quantize ops."""
+    return None if fmt == "fp32" else fmt

@@ -1,14 +1,16 @@
 """Pallas TPU kernels for this system's compute hot-spots (DESIGN.md §6):
 clustering-regularization loss (the paper's server-side hot loop), flash
 attention (prefill path of every attention arch), the Mamba2 chunked scan
-(zamba2), and the fused sLSTM recurrence (xlstm).  Each has a jnp oracle in
-ref.py; ops.py routes every call through the backend dispatcher in
-dispatch.py (``REPRO_KERNEL_BACKEND`` = auto | ref | interpret | pallas),
-so the same call sites run Mosaic on TPU and the reference path on CPU."""
+(zamba2), the fused sLSTM recurrence (xlstm), and the wire-format
+fake-quantizer for the split link.  Each has a jnp oracle in ref.py; ops.py
+routes every call through the backend dispatcher in dispatch.py
+(``REPRO_KERNEL_BACKEND`` = auto | ref | interpret | pallas), so the same
+call sites run Mosaic on TPU and the reference path on CPU."""
 from repro.kernels.dispatch import (backend, get_backend, resolve,
                                     set_backend)
 from repro.kernels.ops import (clustering_loss, flash_attention, mamba2_scan,
-                               slstm_scan)
+                               quantize_dequantize, slstm_scan)
 
 __all__ = ["backend", "clustering_loss", "flash_attention", "get_backend",
-           "mamba2_scan", "resolve", "set_backend", "slstm_scan"]
+           "mamba2_scan", "quantize_dequantize", "resolve", "set_backend",
+           "slstm_scan"]

@@ -16,6 +16,7 @@ from repro.kernels.clustering_loss import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_Q,
                                            clustering_loss_pallas)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba2_scan import mamba2_scan as _mamba2
+from repro.kernels.quantize import quantize_dequantize_pallas as _qdq
 from repro.kernels.slstm_scan import slstm_scan as _slstm
 
 Array = jax.Array
@@ -58,6 +59,8 @@ dispatch.register("mamba2_scan", ref=_mamba2_ref, pallas=_mamba2,
                   supports=lambda x, *a, **kw: x.shape[1] >= 16)
 dispatch.register("slstm_scan", ref=_slstm_ref, pallas=_slstm_pallas,
                   supports=lambda wx, *a, **kw: wx.shape[1] >= 8)
+dispatch.register("quantize_dequantize", ref=ref.quantize_dequantize_ref,
+                  pallas=_qdq, supports=lambda x, *a, **kw: x.size >= 1024)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
@@ -91,4 +94,15 @@ def slstm_scan(wx: Array, r: Array, *, block_t: int = 64,
     """Fused sLSTM recurrence (R resident in VMEM across time steps).
     wx: (B, S, 4, nh, hd); r: (nh, hd, 4*hd) -> h (B, S, nh, hd)."""
     return dispatch.call("slstm_scan", wx, r, block_t=block_t,
+                         interpret=interpret, backend=backend)
+
+
+def quantize_dequantize(x: Array, fmt: str, *, interpret: bool | None = None,
+                        backend: str | None = None) -> Array:
+    """Per-tensor-scaled int8/fp8 fake quantization (wire formats).
+
+    Non-differentiable round trip; the STE / gradient-path wrappers live in
+    ``repro.core.wire``.  Tensors below kernel granularity take the
+    reference path whatever the backend."""
+    return dispatch.call("quantize_dequantize", x, fmt,
                          interpret=interpret, backend=backend)

@@ -1,0 +1,101 @@
+"""Per-tensor-scaled fake-quantization Pallas TPU kernel (wire formats).
+
+The split-link payloads (Eq. (5)/(8) activation uplink, gradient downlink)
+are quantized to int8 or fp8_e4m3 with one fp32 amax scale per tensor:
+
+    scale = amax(|x|) / qmax
+    int8:  dq = clip(round(x / scale), -127, 127) * scale
+    fp8:   dq = fp8_e4m3(x / scale) * scale
+
+Two streaming passes over the tensor viewed as (rows, 128) lanes:
+pass 1 reduces amax into a single VMEM-resident (8, 128) output block
+(sequential grid, read-modify-write accumulation); pass 2 applies
+quantize-dequantize blockwise with the scale broadcast alongside.
+Differentiability (STE / gradient-path quantization) lives in
+``repro.core.wire`` on top of this primitive; the kernel itself is the
+non-differentiable round trip, parity-tested against
+``ref.quantize_dequantize_ref``."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from repro.compat import pallas_compiler_params, pl
+
+Array = jax.Array
+
+LANES = 128
+DEFAULT_BLOCK_R = 256
+
+# qmax per wire format: int8 symmetric range; float8_e4m3fn finite max
+QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def _amax_kernel(x_ref, amax_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        amax_ref[...] = jnp.zeros_like(amax_ref)
+
+    block_max = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)))
+    amax_ref[...] = jnp.maximum(amax_ref[...],
+                                jnp.broadcast_to(block_max, amax_ref.shape))
+
+
+def _qdq_kernel(x_ref, scale_ref, out_ref, *, fmt: str):
+    s = scale_ref[0, 0]
+    xf = x_ref[...].astype(jnp.float32)
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(xf / s), -QMAX["int8"], QMAX["int8"])
+    else:
+        q = (xf / s).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    out_ref[...] = (q * s).astype(out_ref.dtype)
+
+
+def quantize_dequantize_pallas(x: Array, fmt: str, *,
+                               block_r: int = DEFAULT_BLOCK_R,
+                               interpret: bool = False) -> Array:
+    """Fake-quantize ``x`` (any shape/float dtype) through ``fmt``."""
+    if fmt not in QMAX:
+        raise ValueError(f"unknown wire format {fmt!r}; "
+                         f"known: {', '.join(sorted(QMAX))}")
+    orig_shape, orig_dtype = x.shape, x.dtype
+    n = x.size
+    rows = -(-n // LANES)
+    br = max(8, min(block_r, -(-rows // 8) * 8))
+    rows_pad = -(-rows // br) * br
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32),
+                   (0, rows_pad * LANES - n))
+    xr = flat.reshape(rows_pad, LANES)
+    grid = (rows_pad // br,)
+
+    amax_out = pl.pallas_call(
+        _amax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, LANES), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, LANES), jnp.float32),
+        interpret=interpret,
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("arbitrary",)),
+    )(xr)
+    amax = amax_out[0, 0]
+    scale = jnp.where(amax > 0.0, amax / QMAX[fmt], 1.0)
+    scale_b = jnp.broadcast_to(scale, (8, LANES))
+
+    out = pl.pallas_call(
+        functools.partial(_qdq_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((8, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, LANES), jnp.float32),
+        interpret=interpret,
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel",)),
+    )(xr, scale_b)
+    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)

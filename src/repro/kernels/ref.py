@@ -64,6 +64,28 @@ def clustering_loss_ref(z: Array, pseudo: Array, anchor_ok: Array,
     return jnp.where(has_pos, per_anchor, 0.0).sum() / denom
 
 
+QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def quantize_dequantize_ref(x: Array, fmt: str) -> Array:
+    """Per-tensor-scaled fake quantization oracle (wire formats).
+
+    One fp32 amax scale per tensor; int8 rounds-to-even into the symmetric
+    [-127, 127] grid, fp8 round-trips through float8_e4m3fn.  Zero tensors
+    pass through exactly (scale falls back to 1)."""
+    if fmt not in QMAX:
+        raise ValueError(f"unknown wire format {fmt!r}; "
+                         f"known: {', '.join(sorted(QMAX))}")
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0.0, amax / QMAX[fmt], 1.0)
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(xf / scale), -QMAX["int8"], QMAX["int8"])
+    else:
+        q = (xf / scale).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    return (q * scale).astype(x.dtype)
+
+
 def slstm_scan_ref(wx: Array, r: Array) -> Array:
     """Sequential sLSTM oracle. wx: (B, S, 4, nh, hd) gate inputs
     [z, i, f, o]; r: (nh, hd, 4*hd) gate-major recurrent weights.

@@ -32,6 +32,8 @@ from repro.kernels import clustering_loss as fused_clustering_loss
 from repro.core.ema import ema_update
 from repro.core.queue import FeatureQueue, enqueue, init_queue
 from repro.core.split import apply_projection_head, init_projection_head, pool_features
+from repro.core.wire import (WireFormatLike, fake_quantize, parse_wire_format,
+                             quantize_grad, resolve_fmt)
 from repro.launch.mesh import data_axes_size, mesh_axes
 from repro.models import DistContext, build_model
 from repro.sharding.specs import (client_batch_pspec, client_stack_pspecs,
@@ -282,11 +284,16 @@ def _lm_batch_inputs(cfg: ArchConfig, batch: dict, which: str) -> dict:
 
 
 def make_train_step(plan: StepPlan, dist: DistContext,
-                    lr: float = 0.02) -> Callable:
+                    lr: float = 0.02, *,
+                    wire: WireFormatLike = None) -> Callable:
     cfg = plan.cfg
     s = cfg.semisfl
     model = build_model(cfg)
     n = plan.n_clients
+    # split-link wire format (trace-time gates; identity inserts no ops)
+    wf = parse_wire_format(wire)
+    act_fmt = resolve_fmt(wf.activations)
+    grad_fmt = resolve_fmt(wf.gradients)
     # Inside the client-vmapped bottom the client axis IS the data
     # parallelism; MoE shard_map there splits tokens over the model axis
     # only (per-client batches are smaller than the data axes).
@@ -324,6 +331,10 @@ def make_train_step(plan: StepPlan, dist: DistContext,
         # ---- teacher path (no grad): weak views ----
         t_feats, t_extras = jax.vmap(bottom_one)(
             state["teacher_bottoms"], _lm_batch_inputs(cfg, batch, "weak"))
+        if act_fmt is not None:
+            # uplink: per-client quantized teacher features (one amax
+            # scale per client tensor)
+            t_feats = jax.vmap(lambda t: fake_quantize(t, act_fmt))(t_feats)
         t_feats_f = t_feats.reshape((-1,) + t_feats.shape[2:])
         t_extras_f = flatten_extras(t_extras, batch)
         t_out = top_forward(state["t_top"], t_feats_f, t_extras_f)
@@ -356,6 +367,12 @@ def make_train_step(plan: StepPlan, dist: DistContext,
         def loss_fn(client_bottoms, top, proj):
             feats, extras = jax.vmap(bottom_one)(
                 client_bottoms, _lm_batch_inputs(cfg, batch, "strong"))
+            if act_fmt is not None:
+                # uplink: quantized student features, straight-through grad
+                feats = jax.vmap(lambda t: fake_quantize(t, act_fmt))(feats)
+            if grad_fmt is not None:
+                # downlink: the cotangent at the cut ships quantized
+                feats = jax.vmap(lambda t: quantize_grad(t, grad_fmt))(feats)
             feats_f = feats.reshape((-1,) + feats.shape[2:])
             out = top_forward(top, feats_f, flatten_extras(extras, batch))
             if chunked:
@@ -398,7 +415,8 @@ def make_train_step(plan: StepPlan, dist: DistContext,
 
 def make_scanned_train_phase(plan: StepPlan, dist: DistContext,
                              lr: float = 0.02, *,
-                             donate_carry: bool = True) -> Callable:
+                             donate_carry: bool = True,
+                             wire: WireFormatLike = None) -> Callable:
     """Scan-compiled K-iteration LM-task train phase.
 
     Routes :func:`make_train_step` through the same ``core/scan.py``
@@ -408,7 +426,7 @@ def make_scanned_train_phase(plan: StepPlan, dist: DistContext,
     with buffer donation.  Per-iteration metrics come back stacked, so
     the host syncs once per phase instead of once per step."""
     from repro.core.scan import scan_phase
-    return scan_phase(make_train_step(plan, dist, lr),
+    return scan_phase(make_train_step(plan, dist, lr, wire=wire),
                       donate_carry=donate_carry)
 
 
@@ -416,7 +434,8 @@ def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
                                 lr: float = 0.02, *,
                                 donate_carry: bool = True,
                                 depth: int = 2,
-                                put: Optional[Callable] = None) -> Callable:
+                                put: Optional[Callable] = None,
+                                wire: WireFormatLike = None) -> Callable:
     """:func:`make_scanned_train_phase` driven through the async prefetch
     pipeline (``repro.data.prefetch.Prefetcher``): the returned
     ``run(state, batch_thunks)`` consumes an iterable of zero-arg host
@@ -433,7 +452,7 @@ def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
     from repro.data.prefetch import Prefetcher
 
     phase = make_scanned_train_phase(plan, dist, lr,
-                                     donate_carry=donate_carry)
+                                     donate_carry=donate_carry, wire=wire)
     dev_put = put or (lambda tree: jax.tree.map(jnp.asarray, tree))
 
     def run(state, batch_thunks):

@@ -24,18 +24,24 @@ from repro.checkpoint import save_state
 from repro.configs import get_config, smoke_config
 from repro.core.baselines import BASELINES, make_fedswitch_sl
 from repro.core.engine import SemiSFLSystem, make_controller
+from repro.core.wire import parse_wire_format
 from repro.data import (Loader, client_loaders, dirichlet_partition,
                         make_image_dataset, make_pod_clients,
                         train_test_split, uniform_partition)
 
 
-# baselines that can consume the prefetched phase stacks; the gate is
-# enforced both at flag resolution (CLI fail-fast) and in
-# run_training (API callers) from this single definition
-_PREFETCH_BASELINES = ("semisfl", "fedswitch-sl")
+# baselines with a split link: they consume the prefetched phase stacks
+# AND carry the wire-format compression; both gates are enforced at flag
+# resolution (CLI fail-fast) and in run_training (API callers) from this
+# single definition
+_SPLIT_BASELINES = ("semisfl", "fedswitch-sl")
+_PREFETCH_BASELINES = _SPLIT_BASELINES
 _PREFETCH_BASELINE_ERR = ("--prefetch drives the SemiSFL round "
                           "executors; full-model baselines have "
                           "no phase stacks")
+_WIRE_BASELINE_ERR = ("--wire-format compresses the split-link payloads; "
+                      "full-model baselines exchange whole models and "
+                      "have no split link")
 
 
 def build_system(name: str, cfg, **kw):
@@ -47,6 +53,7 @@ def build_system(name: str, cfg, **kw):
     kw.pop("mesh", None)                 # full-model baselines: no split,
     kw.pop("prefetch", None)             # no sharded executor, no phase
     kw.pop("shard_clients", None)        # stacks to prefetch
+    kw.pop("wire_format", None)          # ...and no split link to compress
     return BASELINES[name](cfg, **kw)
 
 
@@ -59,6 +66,7 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
                  k_s: int = 15, k_u: int = 4, mesh=None,
                  prefetch: bool | None = None,
                  shard_clients: bool | None = None,
+                 wire_format: str | None = None,
                  n_pods: int = 1, log=print):
     from dataclasses import replace
     cfg = smoke_config(arch) if smoke else get_config(arch)
@@ -86,6 +94,11 @@ def run_training(arch: str = "paper-cnn", baseline: str = "semisfl",
         kw["shard_clients"] = shard_clients
     if prefetch and baseline not in _PREFETCH_BASELINES:
         raise SystemExit(_PREFETCH_BASELINE_ERR)
+    wire = parse_wire_format(wire_format)   # validates the spelling early
+    if not wire.identity:
+        if baseline not in _SPLIT_BASELINES:
+            raise SystemExit(_WIRE_BASELINE_ERR)
+        kw["wire_format"] = wire
     sys_ = build_system(baseline, cfg, n_clients_per_round=n_active,
                         mesh=mesh, **kw)
     state = sys_.init_state(seed)
@@ -180,6 +193,7 @@ class RunSettings:
     process_id: Optional[int]
     coordinator: Optional[str]
     spawn: bool
+    wire_format: Optional[str] = None
 
 
 def resolve_settings(args: argparse.Namespace,
@@ -226,7 +240,16 @@ def resolve_settings(args: argparse.Namespace,
                 "multi-process path")
     if prefetch and args.baseline not in _PREFETCH_BASELINES:
         raise SystemExit(_PREFETCH_BASELINE_ERR)
+    wire = args.wire_format or e.get("REPRO_WIRE_FORMAT") or None
+    if wire is not None:
+        try:
+            parsed = parse_wire_format(wire)
+        except ValueError as err:
+            raise SystemExit(str(err)) from None
+        if not parsed.identity and args.baseline not in _SPLIT_BASELINES:
+            raise SystemExit(_WIRE_BASELINE_ERR)
     return RunSettings(shard_clients=shard, prefetch=prefetch,
+                       wire_format=wire,
                        num_processes=nproc, process_id=pid,
                        coordinator=coord, spawn=nproc > 1 and pid is None)
 
@@ -259,6 +282,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "previous round's device execution (README: "
                          "'Async double-buffered prefetch').  Overrides "
                          "REPRO_PREFETCH")
+    ap.add_argument("--wire-format", default=None,
+                    help="split-link wire format: fp32 (default, "
+                         "identity), int8 or fp8 (per-tensor-scaled "
+                         "quantized activations + gradients), optionally "
+                         "composed with a top-k sparsified FedAvg delta "
+                         "upload, e.g. 'int8+topk0.1'.  Overrides "
+                         "REPRO_WIRE_FORMAT; split baselines only")
     ap.add_argument("--num-processes", type=int, default=None,
                     help="run the round multi-process (one pod per "
                          "process, jax.distributed).  Without "
@@ -316,6 +346,7 @@ def main(argv: Optional[list] = None) -> None:
             smoke=not args.full_config, mesh=mesh,
             prefetch=settings.prefetch,
             shard_clients=settings.shard_clients,
+            wire_format=settings.wire_format,
             n_pods=max(settings.num_processes, 1),
             log=print if is_main else (lambda *a, **k: None))
         if args.ckpt and is_main:

@@ -1,0 +1,150 @@
+"""Byte accounting for the Section V-C cost model: dtype-aware tree
+billing, the CostModel's seeded link seam, per-branch round bills, and the
+wire formats' effect on the split-link bytes."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.commcost import CostModel, round_bill, tree_bytes
+from repro.core.wire import (WireFormat, parse_wire_format, quantized_bytes,
+                             topk_count, topk_payload_bytes)
+
+
+# ------------------------------------------------------------ tree_bytes
+
+def test_tree_bytes_fp32_matches_four_bytes_per_param():
+    tree = {"a": jnp.zeros((3, 4), jnp.float32),
+            "b": [jnp.zeros(7, jnp.float32)]}
+    assert tree_bytes(tree) == (12 + 7) * 4
+
+
+def test_tree_bytes_bills_actual_dtypes():
+    tree = {"fp32": jnp.zeros(10, jnp.float32),
+            "bf16": jnp.zeros(10, jnp.bfloat16),
+            "int8": jnp.zeros(10, jnp.int8)}
+    assert tree_bytes(tree) == 10 * 4 + 10 * 2 + 10 * 1
+
+
+def test_tree_bytes_accepts_abstract_leaves():
+    import jax
+    tree = {"w": jax.ShapeDtypeStruct((5, 5), jnp.float32)}
+    assert tree_bytes(tree) == 100
+
+
+# ------------------------------------------------------------- CostModel
+
+def test_link_draws_are_seeded_and_resettable():
+    a, b = CostModel(seed=3), CostModel(seed=3)
+    draws_a = [a.link() for _ in range(4)]
+    assert draws_a == [b.link() for _ in range(4)]
+    a.reset()
+    assert [a.link() for _ in range(4)] == draws_a
+    lo_up, hi_up = a.up_mbps
+    for up, down in draws_a:
+        assert lo_up * 1e6 / 8 <= up <= hi_up * 1e6 / 8
+
+
+# --------------------------------------------------------- byte helpers
+
+def test_quantized_bytes():
+    assert quantized_bytes(1000, "fp32") == 4000.0
+    assert quantized_bytes(1000, "int8") == 1000.0 + 4
+    assert quantized_bytes(1000, "fp8", n_tensors=3) == 1000.0 + 12
+
+
+def test_topk_payload_bytes():
+    assert topk_payload_bytes(1000, 1.0) == 4000.0
+    # value + index per kept entry
+    assert topk_payload_bytes(1000, 0.1) == topk_count(1000, 0.1) * 8.0
+
+
+# ------------------------------------------------------------ round_bill
+
+CFG = smoke_config("paper-cnn")
+KW = dict(bottom_bytes=4000, full_bytes=40000, feat_bytes_per_batch=2048,
+          k_s=4, k_u=3, n_active=5, batch=8)
+
+
+def _bill(method, wire=None, **over):
+    kw = {**KW, **over}
+    return round_bill(method, CFG, cost=CostModel(seed=0), wire=wire, **kw)
+
+
+def test_supervised_only_bills_zero_bytes():
+    b = _bill("supervised-only")
+    assert b.bytes_up == b.bytes_down == 0.0
+    assert b.seconds > 0
+
+
+def test_full_model_branch_bytes():
+    b = _bill("semifl")
+    assert b.bytes_up == KW["full_bytes"] * KW["n_active"]
+    assert b.bytes_down == KW["full_bytes"] * KW["n_active"]
+    # fedmatch ships helper models down too
+    bm = _bill("fedmatch")
+    assert bm.bytes_down == KW["full_bytes"] * KW["n_active"] * 3
+
+
+def test_split_branch_fp32_bytes():
+    b = _bill("split")
+    n, ku = KW["n_active"], KW["k_u"]
+    feat = KW["feat_bytes_per_batch"]
+    assert b.bytes_up == KW["bottom_bytes"] * n + 2 * feat * ku * n
+    assert b.bytes_down == 2 * KW["bottom_bytes"] * n + feat * ku * n
+
+
+def test_split_branch_none_wire_equals_fp32_wire():
+    a = _bill("split", wire=None)
+    b = _bill("split", wire=WireFormat())
+    assert (a.bytes_up, a.bytes_down) == (b.bytes_up, b.bytes_down)
+
+
+def test_split_branch_int8_wire_bytes():
+    w = parse_wire_format("int8")
+    b = _bill("split", wire=w)
+    n, ku = KW["n_active"], KW["k_u"]
+    feat_elems = KW["feat_bytes_per_batch"] // 4
+    feat_one = feat_elems * 1 + 4            # int8 payload + fp32 scale
+    assert b.bytes_up == KW["bottom_bytes"] * n + 2 * feat_one * ku * n
+    # broadcast stays fp32; downlink gradient is quantized
+    assert b.bytes_down == 2 * KW["bottom_bytes"] * n + feat_one * ku * n
+
+
+def test_split_branch_topk_bytes():
+    w = parse_wire_format("topk0.1")
+    b = _bill("split", wire=w)
+    n, ku = KW["n_active"], KW["k_u"]
+    feat = KW["feat_bytes_per_batch"]
+    kept = topk_count(KW["bottom_bytes"] // 4, 0.1)
+    assert b.bytes_up == kept * 8 * n + 2 * feat * ku * n
+    assert b.bytes_down == 2 * KW["bottom_bytes"] * n + feat * ku * n
+
+
+def test_quantized_wire_cuts_split_traffic_hard():
+    """The acceptance ratio at billing level: int8 + top-k must cut the
+    feature-dominated split bill well past 60%."""
+    fp32 = _bill("split", feat_bytes_per_batch=1 << 20)
+    int8 = _bill("split", wire=parse_wire_format("int8+topk0.05"),
+                 feat_bytes_per_batch=1 << 20)
+    assert int8.bytes_total < 0.4 * fp32.bytes_total
+
+
+def test_full_model_branch_ignores_wire():
+    a = _bill("semifl")
+    b = _bill("semifl", wire=parse_wire_format("int8+topk0.1"))
+    assert (a.bytes_up, a.bytes_down) == (b.bytes_up, b.bytes_down)
+
+
+def test_round_bill_seconds_reproducible_via_reset():
+    cost = CostModel(seed=7)
+    a = round_bill("split", CFG, cost=cost, **KW)
+    cost.reset()
+    b = round_bill("split", CFG, cost=cost, **KW)
+    assert a.seconds == pytest.approx(b.seconds)
+    assert a.bytes_total == b.bytes_total
+
+
+def test_more_active_clients_bill_more_bytes():
+    small = _bill("split", n_active=2)
+    big = _bill("split", n_active=8)
+    assert big.bytes_total == pytest.approx(small.bytes_total * 4)

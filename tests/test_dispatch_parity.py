@@ -98,6 +98,52 @@ def test_slstm_scan_ref_vs_interpret():
     np.testing.assert_allclose(out_int, out_ref, atol=1e-5, rtol=1e-4)
 
 
+# shapes around the quantizer's (rows, 128)-lane view: below one lane row,
+# ragged pads in both axes, and a multi-grid-step amax reduction
+QDQ_SHAPES = [
+    (1024,),      # exactly the dispatch granularity; one padded row block
+    (33, 40),     # ragged 2-D: pads rows and lanes
+    (4, 9, 37),   # 3-D ragged
+    (70000,),     # 547 lane rows -> 3 sequential amax grid steps
+]
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8"])
+@pytest.mark.parametrize("shape", QDQ_SHAPES)
+def test_quantize_ref_vs_interpret(fmt, shape):
+    rng = np.random.RandomState(sum(shape))
+    x = jnp.asarray(rng.randn(*shape) * 3.0, jnp.float32)
+    out_ref = kernels.quantize_dequantize(x, fmt, backend="ref")
+    out_int = kernels.quantize_dequantize(x, fmt, interpret=True)
+    # identical op sequence (same round/cast chain, same scale) -> bit-exact
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_int))
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8"])
+def test_quantize_grad_path_ref_vs_interpret(fmt):
+    """The wire ops' backward passes run the dispatched kernel on the
+    cotangent; ref and interpret must agree there too."""
+    from repro.core import wire
+    from repro.kernels import dispatch
+
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(40, 40), jnp.float32)
+    w = jnp.asarray(rng.randn(40, 40), jnp.float32)
+    f = lambda xx: jnp.sum(wire.quantize_grad(xx, fmt) * w)
+    with dispatch.backend("ref"):
+        g_ref = jax.grad(f)(x)
+    with dispatch.backend("interpret"):
+        g_int = jax.grad(f)(x)
+    np.testing.assert_array_equal(np.asarray(g_ref), np.asarray(g_int))
+
+
+def test_quantize_below_granularity_falls_back_to_ref():
+    x = jnp.asarray(np.random.RandomState(4).randn(7), jnp.float32)
+    a = kernels.quantize_dequantize(x, "int8", backend="ref")
+    b_ = kernels.quantize_dequantize(x, "int8", backend="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
 def test_below_granularity_shapes_fall_back_to_ref_under_any_backend():
     # wx too short for the kernel: every backend must serve the ref path
     rng = np.random.RandomState(3)
