@@ -66,6 +66,76 @@ def _smoke_mesh(n_active: int):
     return make_client_mesh(n_active)
 
 
+def _smoke_lm_timings(log) -> dict:
+    """Tiny LM split phase, replicated top vs model-sharded top.
+
+    On the 1-device CI runner ``make_host_mesh()`` degenerates to a
+    (data=1, model=1) mesh, so ``us_per_round_top_sharded`` measures pure
+    partitioner + shard_map overhead of the model-sharded program against
+    the replicated scanned phase — exactly the regression CI should see
+    first.  ``model_shard_speedup`` (replicated / sharded, bigger is
+    better) therefore sits near 1 on CI; the trajectory gate trips when it
+    halves, i.e. when the sharded program grows a real serialization."""
+    from dataclasses import replace
+
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import (arg_shardings, input_specs, make_plan,
+                                    make_process_local_batch_put,
+                                    make_scanned_train_phase,
+                                    make_sharded_train_phase)
+    from repro.models import DistContext
+
+    cfg = replace(smoke_config("qwen3-14b"), dtype="float32")
+    plan = make_plan(cfg, InputShape("train_tiny", 8, 4, "train"),
+                     n_clients=4)
+    specs = input_specs(plan)
+    rng = np.random.RandomState(0)
+
+    def realize(x):
+        if x.dtype == np.int32:
+            return rng.randint(0, max(cfg.vocab_size, 2),
+                               x.shape).astype(np.int32)
+        if x.dtype == np.bool_:
+            return np.zeros(x.shape, bool)
+        return rng.randn(*x.shape).astype(x.dtype)
+
+    state_host = jax.tree.map(realize, specs["state"])
+    stack = jax.tree.map(lambda x: np.stack([realize(x) for _ in range(4)]),
+                         specs["batch"])
+    mesh = make_host_mesh()
+    sh = arg_shardings(plan, mesh, specs)
+    put = make_process_local_batch_put(plan, mesh, specs, leading_axes=1)
+    reps, times = 3, {}
+    for mode, phase, state, batches in (
+            ("top_replicated",
+             make_scanned_train_phase(plan, DistContext(),
+                                      donate_carry=False),
+             jax.tree.map(jax.device_put, state_host),
+             jax.tree.map(jax.device_put, stack)),
+            ("top_sharded",
+             make_sharded_train_phase(plan, mesh, donate_carry=False),
+             jax.tree.map(jax.device_put, state_host, sh["state"]),
+             put(stack))):
+        jax.block_until_ready(phase(state, batches))    # compile + warm
+        t0 = time.time()
+        for _ in range(reps):
+            out = phase(state, batches)
+        jax.block_until_ready(out)
+        times[mode] = (time.time() - t0) * 1e6 / reps
+        log(f"lm phase {mode}: {times[mode]:.0f}us")
+    return {
+        "us_per_round_top_replicated": round(times["top_replicated"]),
+        "us_per_round_top_sharded": round(times["top_sharded"]),
+        "model_shard_speedup": round(
+            times["top_replicated"] / times["top_sharded"], 2),
+    }
+
+
 def run_smoke(out_dir: str) -> dict:
     """Tiny config end-to-end: exercises the data pipeline, the engine's
     multi-client round (scanned, eager, client-sharded AND prefetched
@@ -75,8 +145,10 @@ def run_smoke(out_dir: str) -> dict:
     ``us_per_round_sharded`` / ``us_per_round_prefetch`` (+
     ``prefetch_overlap_frac``) so CI can gate executor regressions, the
     compressed-wire bytes (``bytes_per_round_{fp32,int8}`` +
-    ``comm_reduction_frac``), and the rolled-vs-unrolled scan-of-conv
-    micro ratio the ROADMAP tracks."""
+    ``comm_reduction_frac``), the rolled-vs-unrolled scan-of-conv
+    micro ratio the ROADMAP tracks, and the LM split-phase
+    replicated-vs-model-sharded timings (``us_per_round_top_sharded`` +
+    ``model_shard_speedup``)."""
     from repro.kernels import dispatch
 
     from benchmarks.common import build_system, run_method
@@ -168,6 +240,8 @@ def run_smoke(out_dir: str) -> dict:
     }
     # ROADMAP "XLA:CPU scan-of-conv regression" tracker
     rec.update(scan_unroll_micro(log=log))
+    # LM split phase: replicated vs model-sharded top (3-axis mesh spec)
+    rec.update(_smoke_lm_timings(log=log))
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "BENCH_smoke.json"), "w") as f:
         json.dump(rec, f, indent=2)

@@ -85,6 +85,42 @@ def scan_phase(step_fn: Callable[[Carry, Batch], Tuple[Carry, Any]], *,
     return jax.jit(phase, donate_argnums=(0,) if donate_carry else ())
 
 
+def pinned_scan_phase(step_fn: Callable[[Carry, Batch], Tuple[Carry, Any]],
+                      *, carry_shardings, out_shardings,
+                      donate_carry: bool = True,
+                      unroll: Union[int, bool, None] = None,
+                      jit: bool = True
+                      ) -> Callable[[Carry, Batch], Tuple[Carry, Any]]:
+    """:func:`scan_phase` with jit-level output-sharding pins and NO
+    phase-level ``shard_map``.
+
+    This is the phase shape for steps that mix a *manual* ``shard_map``
+    subregion with GSPMD model-parallel computation (the model-sharded LM
+    train step in ``launch/steps.py``): on the pinned JAX 0.4.37, XLA's
+    SPMD partitioner rejects ``while`` loops inside partially-manual
+    regions (``Check failed: sharding.IsManualSubgroup()``), so the scan
+    must stay OUTSIDE the manual region — the step body enters/leaves its
+    own fully-manual ``shard_map`` each iteration, and the layer-stack
+    scans inside the model run under plain GSPMD.
+
+    ``carry_shardings`` / ``out_shardings`` are NamedSharding pytrees
+    matching the carry and the K-stacked per-step outputs.  Pinning them
+    keeps GSPMD from re-committing the model-parallel parameters (or
+    tagging replicated metrics with degenerate data-axis shardings) and
+    makes phase ``k+1`` see identically-committed inputs — same
+    no-spurious-recompile argument as :func:`sharded_scan_phase`."""
+    if unroll is None:
+        unroll = default_unroll()
+
+    def phase(carry: Carry, batches: Batch):
+        return jax.lax.scan(step_fn, carry, batches, unroll=unroll)
+
+    if not jit:
+        return phase
+    return jax.jit(phase, donate_argnums=(0,) if donate_carry else (),
+                   out_shardings=(carry_shardings, out_shardings))
+
+
 def sharded_scan_phase(step_fn: Callable[[Carry, Batch], Tuple[Carry, Any]],
                        *, mesh, carry_specs, batch_specs, out_specs,
                        donate_carry: bool = True,

@@ -256,6 +256,26 @@ def put_replicated(tree: Any, mesh) -> Any:
     return jax.tree.map(one, tree)
 
 
+def put_from_full(tree: Any, shardings: Any) -> Any:
+    """Commit host-identical full values onto arbitrary shardings.
+
+    Every process holds the same full host value (the engine's lockstep
+    construction); each materializes only its addressable shards by
+    slicing that value per device index — no cross-process transfer, safe
+    whatever the sharding (client axis over ``("pod", "data")``,
+    model-parallel top parameters, replicated queue/metrics alike).  This
+    is the state placement for the model-sharded LM phase, whose
+    ``arg_shardings`` mix all three."""
+    import jax
+
+    def one(leaf, sh):
+        leaf = np.asarray(leaf)
+        return jax.make_array_from_callback(leaf.shape, sh,
+                                            lambda idx: leaf[idx])
+
+    return jax.tree.map(one, tree, shardings)
+
+
 def make_pod_array(sharding, local: np.ndarray,
                    global_shape: tuple) -> Any:
     """Assemble a global array from this process's slab.

@@ -36,8 +36,8 @@ from repro.core.wire import (WireFormatLike, fake_quantize, parse_wire_format,
                              quantize_grad, resolve_fmt)
 from repro.launch.mesh import data_axes_size, mesh_axes
 from repro.models import DistContext, build_model
-from repro.sharding.specs import (client_batch_pspec, client_stack_pspecs,
-                                  tree_pspecs)
+from repro.sharding.specs import (client_batch_pspec, leading_axis_pspecs,
+                                  tree_pspecs, validate_mesh_axes)
 
 Array = jax.Array
 
@@ -240,11 +240,15 @@ def arg_shardings(plan: StepPlan, mesh: Mesh, specs: dict) -> dict:
     out: dict = {}
     if plan.kind == "train":
         st = specs["state"]
+        # Bottoms shard ONLY their leading client axis: each client's half
+        # replicates over the model ranks inside its data shard, so the
+        # manual shard_map region of the model-sharded step sees whole
+        # per-client parameters (split learning's premise — the client
+        # halves are small by construction; only top/proj ride the model
+        # axis).
         out["state"] = {
-            "client_bottoms": client_stack_pspecs(st["client_bottoms"], d,
-                                                  model_axis=model_axis),
-            "teacher_bottoms": client_stack_pspecs(st["teacher_bottoms"], d,
-                                                   model_axis=model_axis),
+            "client_bottoms": leading_axis_pspecs(st["client_bottoms"], d),
+            "teacher_bottoms": leading_axis_pspecs(st["teacher_bottoms"], d),
             "top": tree_pspecs(st["top"], model_axis=model_axis),
             "t_top": tree_pspecs(st["t_top"], model_axis=model_axis),
             "proj": tree_pspecs(st["proj"], model_axis=model_axis),
@@ -264,6 +268,7 @@ def arg_shardings(plan: StepPlan, mesh: Mesh, specs: dict) -> dict:
         out["params"] = sanitize(out["params"], specs["params"])
         out["cache"] = sanitize(out["cache"], specs["cache"])
     out["batch"] = sanitize(out["batch"], specs["batch"])
+    validate_mesh_axes(mesh, out, what="arg_shardings spec")
     return jax.tree.map(lambda s: NamedSharding(mesh, s), out,
                         is_leaf=lambda x: isinstance(x, P))
 
@@ -285,7 +290,27 @@ def _lm_batch_inputs(cfg: ArchConfig, batch: dict, which: str) -> dict:
 
 def make_train_step(plan: StepPlan, dist: DistContext,
                     lr: float = 0.02, *,
-                    wire: WireFormatLike = None) -> Callable:
+                    wire: WireFormatLike = None,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """One LM-task SemiSFL train iteration (replicated or model-sharded).
+
+    With ``mesh=None`` every parameter is replicated and the client axis
+    is a plain vmap.  With a mesh (see :func:`make_sharded_train_step`)
+    the step becomes the 3-axis fleet program: the client-stacked bottom
+    halves run inside a *fully manual* ``shard_map`` region over the data
+    axes (pod x data) — each shard owns its client block, Eq. (8) bottom
+    gradients are collective-free by construction, and the per-client
+    wire-format quantization scales stay per-client because the vmap
+    rides inside the region — while the server top/proj (+ teacher
+    copies) stay OUTSIDE the region as GSPMD model-parallel computation
+    over the ``sharding/specs.py`` table.  The cut between the two is the
+    split link: features leave the region client-sharded, the masked-mean
+    CE is written in sum form (explicit global numerator/denominator), and
+    the cotangent at the cut re-enters the region through the shard_map
+    transpose.  The scan over K stays outside (the pinned JAX 0.4.37
+    cannot partition ``while`` inside partially-manual regions, so manual
+    and model-parallel code may not nest — see
+    ``core/scan.py::pinned_scan_phase``)."""
     cfg = plan.cfg
     s = cfg.semisfl
     model = build_model(cfg)
@@ -304,6 +329,60 @@ def make_train_step(plan: StepPlan, dist: DistContext,
         feats, _, extras = model.bottom_apply(pb, binputs, mode="train",
                                               dist=dist_bottom)
         return feats, extras
+
+    def _bottom_block(with_grad_fmt: bool) -> Callable:
+        """Client-stacked bottom fwd (+ wire quantization), vmapped over
+        whatever client block it is handed — the whole stack (replicated
+        path) or one shard's local block (inside the manual region)."""
+        def block(stack, binputs):
+            feats, extras = jax.vmap(bottom_one)(stack, binputs)
+            if act_fmt is not None:
+                # uplink: per-client quantized features (one amax scale
+                # per client tensor)
+                feats = jax.vmap(lambda t: fake_quantize(t, act_fmt))(feats)
+            if with_grad_fmt and grad_fmt is not None:
+                # downlink: the cotangent at the cut ships quantized
+                feats = jax.vmap(lambda t: quantize_grad(t, grad_fmt))(feats)
+            return feats, extras
+        return block
+
+    teacher_bottom = _bottom_block(False)
+    student_bottom = _bottom_block(True)
+    if mesh is not None:
+        if dist.moe_impl == "ep":
+            raise ValueError(
+                "model-sharded LM step: moe_impl='ep' nests a manual "
+                "shard_map inside the GSPMD top, which the pinned JAX "
+                "cannot partition around the layer scans; use "
+                "moe_impl='dense' (expert-parallel composition is a "
+                "follow-up)")
+        from repro.compat import shard_map as _shard_map
+        data_axes, _ = mesh_axes(mesh)
+        shards = data_axes_size(mesh, data_axes)
+        if n % shards:
+            raise ValueError(
+                f"model-sharded LM step: n_clients={n} does not divide "
+                f"over the {shards} data shard(s) of mesh axes "
+                f"{data_axes}")
+        specs = input_specs(plan)
+        bot_specs = leading_axis_pspecs(specs["state"]["client_bottoms"],
+                                        data_axes)
+
+        def client_specs(tree):
+            return jax.tree.map(
+                lambda l: client_batch_pspec(l.ndim, data_axes), tree)
+
+        def wrap(block, which):
+            binputs = _lm_batch_inputs(cfg, specs["batch"], which)
+            out_struct = jax.eval_shape(block, specs["state"]
+                                        ["client_bottoms"], binputs)
+            return _shard_map(block, mesh=mesh,
+                              in_specs=(bot_specs, client_specs(binputs)),
+                              out_specs=client_specs(out_struct),
+                              check_vma=False)
+
+        teacher_bottom = wrap(teacher_bottom, "weak")
+        student_bottom = wrap(student_bottom, "strong")
 
     def flatten_extras(extras, batch):
         """Client-stacked vmapped extras -> flat-batch extras for the top."""
@@ -329,12 +408,8 @@ def make_train_step(plan: StepPlan, dist: DistContext,
         queue: FeatureQueue = state["queue"]
 
         # ---- teacher path (no grad): weak views ----
-        t_feats, t_extras = jax.vmap(bottom_one)(
+        t_feats, t_extras = teacher_bottom(
             state["teacher_bottoms"], _lm_batch_inputs(cfg, batch, "weak"))
-        if act_fmt is not None:
-            # uplink: per-client quantized teacher features (one amax
-            # scale per client tensor)
-            t_feats = jax.vmap(lambda t: fake_quantize(t, act_fmt))(t_feats)
         t_feats_f = t_feats.reshape((-1,) + t_feats.shape[2:])
         t_extras_f = flatten_extras(t_extras, batch)
         t_out = top_forward(state["t_top"], t_feats_f, t_extras_f)
@@ -365,22 +440,23 @@ def make_train_step(plan: StepPlan, dist: DistContext,
 
         # ---- student path: strong views, grads wrt bottoms/top/proj ----
         def loss_fn(client_bottoms, top, proj):
-            feats, extras = jax.vmap(bottom_one)(
+            feats, extras = student_bottom(
                 client_bottoms, _lm_batch_inputs(cfg, batch, "strong"))
-            if act_fmt is not None:
-                # uplink: quantized student features, straight-through grad
-                feats = jax.vmap(lambda t: fake_quantize(t, act_fmt))(feats)
-            if grad_fmt is not None:
-                # downlink: the cotangent at the cut ships quantized
-                feats = jax.vmap(lambda t: quantize_grad(t, grad_fmt))(feats)
             feats_f = feats.reshape((-1,) + feats.shape[2:])
             out = top_forward(top, feats_f, flatten_extras(extras, batch))
             if chunked:
                 h = losses.chunked_cross_entropy(
                     out["hidden"], top["lm_head"], pseudo_tok, mask=ok_tok)
             else:
-                h = losses.cross_entropy(out["logits"], pseudo_tok,
-                                         mask=ok_tok)
+                # sum form of the global masked mean (PR 3's engine
+                # treatment): numerator and denominator are explicit
+                # global sums, so every client shard's gradient piece is
+                # exactly its share of the one global mean — under the
+                # model-sharded step GSPMD reduces both with one
+                # all-reduce at the cut, independent of N
+                nll_sum, m_cnt = losses.cross_entropy_sum(
+                    out["logits"], pseudo_tok, ok_tok)
+                h = nll_sum / jnp.maximum(m_cnt, 1.0)
             z = apply_projection_head(proj, cfg, pool_features(cfg, feats_f))
             # dispatched Eq. (5): Mosaic kernel on TPU, jnp reference on CPU
             c = fused_clustering_loss(
@@ -413,6 +489,51 @@ def make_train_step(plan: StepPlan, dist: DistContext,
     return step
 
 
+def make_sharded_train_step(plan: StepPlan, mesh: Mesh,
+                            lr: float = 0.02, *,
+                            wire: WireFormatLike = None,
+                            dist: Optional[DistContext] = None) -> Callable:
+    """:func:`make_train_step` composed with the 3-axis fleet mesh:
+    client axis manual over (pod x data), top/proj GSPMD over ``model``.
+
+    ``dist`` defaults to the dense DistContext the GSPMD top needs (the
+    model axis is expressed through the jit-level ``arg_shardings`` pins,
+    not through nested shard_maps)."""
+    if dist is None:
+        from repro.models import variants
+        dist = DistContext(long_context=plan.long_context,
+                           remat=variants.remat_enabled())
+    return make_train_step(plan, dist, lr, wire=wire, mesh=mesh)
+
+
+def make_sharded_train_phase(plan: StepPlan, mesh: Mesh,
+                             lr: float = 0.02, *,
+                             donate_carry: bool = True,
+                             wire: WireFormatLike = None,
+                             dist: Optional[DistContext] = None,
+                             unroll=None) -> Callable:
+    """Scan-compiled K-iteration model-sharded LM train phase.
+
+    The scan stays OUTSIDE the step's manual region (see
+    :func:`make_train_step`); the jit pins carry outputs to the same
+    ``arg_shardings`` the inputs commit to — top/proj on ``model``,
+    bottoms on the client axis, queue/metrics replicated — so GSPMD never
+    re-commits the model-parallel parameters between phases and the
+    collective footprint at the cut stays fixed as N grows."""
+    from repro.core.scan import pinned_scan_phase
+
+    step = make_sharded_train_step(plan, mesh, lr, wire=wire, dist=dist)
+    specs = input_specs(plan)
+    shardings = arg_shardings(plan, mesh, specs)
+    _, metrics_struct = jax.eval_shape(step, specs["state"], specs["batch"])
+    out_shardings = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * (l.ndim + 1)))),
+        metrics_struct)
+    return pinned_scan_phase(step, carry_shardings=shardings["state"],
+                             out_shardings=out_shardings,
+                             donate_carry=donate_carry, unroll=unroll)
+
+
 def make_scanned_train_phase(plan: StepPlan, dist: DistContext,
                              lr: float = 0.02, *,
                              donate_carry: bool = True,
@@ -435,7 +556,8 @@ def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
                                 donate_carry: bool = True,
                                 depth: int = 2,
                                 put: Optional[Callable] = None,
-                                wire: WireFormatLike = None) -> Callable:
+                                wire: WireFormatLike = None,
+                                mesh: Optional[Mesh] = None) -> Callable:
     """:func:`make_scanned_train_phase` driven through the async prefetch
     pipeline (``repro.data.prefetch.Prefetcher``): the returned
     ``run(state, batch_thunks)`` consumes an iterable of zero-arg host
@@ -448,11 +570,21 @@ def make_prefetched_train_phase(plan: StepPlan, dist: DistContext,
     ``put`` overrides the device placement of each built batch pytree
     (default: ``jnp.asarray`` per leaf).  Under ``jax.distributed`` pass
     :func:`make_process_local_batch_put` so each process's worker ships
-    only its own client block."""
+    only its own client block.
+
+    ``mesh`` routes the phase through :func:`make_sharded_train_phase`
+    (model-sharded top, out-sharding pins) instead of the replicated
+    scanned phase."""
     from repro.data.prefetch import Prefetcher
 
-    phase = make_scanned_train_phase(plan, dist, lr,
-                                     donate_carry=donate_carry, wire=wire)
+    if mesh is not None:
+        phase = make_sharded_train_phase(plan, mesh, lr,
+                                         donate_carry=donate_carry,
+                                         wire=wire, dist=dist)
+    else:
+        phase = make_scanned_train_phase(plan, dist, lr,
+                                         donate_carry=donate_carry,
+                                         wire=wire)
     dev_put = put or (lambda tree: jax.tree.map(jnp.asarray, tree))
 
     def run(state, batch_thunks):

@@ -194,6 +194,9 @@ class RunSettings:
     coordinator: Optional[str]
     spawn: bool
     wire_format: Optional[str] = None
+    # model-parallel shards for the server-side top (mesh "model" axis);
+    # 1 = replicated top (the default).  > 1 implies the sharded executor.
+    shard_model: int = 1
 
 
 def resolve_settings(args: argparse.Namespace,
@@ -216,8 +219,25 @@ def resolve_settings(args: argparse.Namespace,
         pid = _env_optint(e, "REPRO_PROCESS_ID")
     coord = args.coordinator or e.get("REPRO_COORDINATOR") or None
 
+    shard_model = args.shard_model
+    if shard_model is None:
+        shard_model = _env_optint(e, "REPRO_SHARD_MODEL")
+    shard_model = 1 if shard_model is None else shard_model
+
     if nproc < 1:
         raise SystemExit(f"--num-processes must be >= 1, got {nproc}")
+    if shard_model < 1:
+        raise SystemExit(
+            f"--shard-model/REPRO_SHARD_MODEL must be >= 1, "
+            f"got {shard_model}")
+    if shard_model > 1:
+        if shard is False:
+            raise SystemExit(
+                "a model-sharded top runs inside the client-sharded "
+                "executor's mesh; --no-shard-clients / "
+                "REPRO_SHARD_CLIENTS=0 contradicts "
+                f"--shard-model {shard_model}")
+        shard = True                       # implied by the model axis
     if pid is not None and nproc <= 1:
         raise SystemExit(
             "--process-id/REPRO_PROCESS_ID given but --num-processes/"
@@ -249,7 +269,7 @@ def resolve_settings(args: argparse.Namespace,
         if not parsed.identity and args.baseline not in _SPLIT_BASELINES:
             raise SystemExit(_WIRE_BASELINE_ERR)
     return RunSettings(shard_clients=shard, prefetch=prefetch,
-                       wire_format=wire,
+                       wire_format=wire, shard_model=shard_model,
                        num_processes=nproc, process_id=pid,
                        coordinator=coord, spawn=nproc > 1 and pid is None)
 
@@ -282,6 +302,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "previous round's device execution (README: "
                          "'Async double-buffered prefetch').  Overrides "
                          "REPRO_PREFETCH")
+    ap.add_argument("--shard-model", type=int, default=None,
+                    help="model-parallel shards for the server-side top "
+                         "(the mesh's 'model' axis; README: 'Model-axis "
+                         "sharding').  1 (default) keeps the top "
+                         "replicated; > 1 implies --shard-clients and "
+                         "needs shard-model x num-processes <= device "
+                         "count.  Overrides REPRO_SHARD_MODEL")
     ap.add_argument("--wire-format", default=None,
                     help="split-link wire format: fp32 (default, "
                          "identity), int8 or fp8 (per-tensor-scaled "
@@ -329,10 +356,12 @@ def main(argv: Optional[list] = None) -> None:
     if settings.shard_clients:
         if settings.num_processes > 1:
             from repro.launch.mesh import make_host_mesh
-            mesh = make_host_mesh(pods=settings.num_processes)
+            mesh = make_host_mesh(model=settings.shard_model,
+                                  pods=settings.num_processes)
         else:
             from repro.launch.mesh import make_client_mesh
-            mesh = make_client_mesh(args.active)
+            mesh = make_client_mesh(args.active,
+                                    model=settings.shard_model)
 
     # metric logging + checkpoint writes are process-0-only; every other
     # pod computes the same replicated values and stays silent

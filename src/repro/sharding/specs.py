@@ -24,6 +24,49 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# Named mesh axes (the only axis names the mesh builders in
+# ``repro.launch.mesh`` ever create).  Library code outside this package
+# and ``launch/mesh.py`` must spell axis names through these constants —
+# reprolint RL007 flags ad-hoc string literals inside ``PartitionSpec``
+# calls so specs cannot drift from the builders.
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"
+
+
+class MissingMeshAxisError(ValueError):
+    """A PartitionSpec names a mesh axis the target mesh does not have.
+
+    Raised by :func:`validate_mesh_axes` (and everything that goes through
+    :func:`tree_shardings`) instead of letting ``NamedSharding`` fail with
+    a generic error deep inside jit argument binding."""
+
+
+def validate_mesh_axes(mesh: Mesh, pspec_tree: Any, *,
+                       what: str = "partition spec") -> Any:
+    """Fail fast when any spec in ``pspec_tree`` names an axis ``mesh``
+    lacks.  Returns ``pspec_tree`` unchanged so call sites can wrap
+    in-line."""
+    names = set(mesh.axis_names)
+
+    def one(spec):
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                if a not in names:
+                    raise MissingMeshAxisError(
+                        f"{what} {tuple(spec)} names mesh axis {a!r} but "
+                        f"the mesh only has axes {tuple(mesh.axis_names)}; "
+                        "build the mesh with make_host_mesh(model=...) / "
+                        "make_client_mesh(..., model=...) or drop the "
+                        "model-parallel specs")
+        return spec
+
+    jax.tree.map(one, pspec_tree, is_leaf=lambda x: isinstance(x, P))
+    return pspec_tree
+
 
 # rule: last-key-name -> (trailing_rank, trailing_spec)
 _RULES: dict[str, tuple[int, tuple]] = {
@@ -76,7 +119,7 @@ def _path_keys(path) -> list[str]:
     return out
 
 
-def leaf_pspec(path, leaf, *, model_axis: str = "model") -> P:
+def leaf_pspec(path, leaf, *, model_axis: str = AXIS_MODEL) -> P:
     keys = _path_keys(path)
     name = keys[-1] if keys else ""
     rules = _EXPERT_RULES if "experts" in keys[:-1] else _RULES
@@ -99,13 +142,13 @@ def leaf_pspec(path, leaf, *, model_axis: str = "model") -> P:
     return P(*([None] * (nd - rank) + list(spec)))
 
 
-def tree_pspecs(tree: Any, *, model_axis: str = "model") -> Any:
+def tree_pspecs(tree: Any, *, model_axis: str = AXIS_MODEL) -> Any:
     return jax.tree_util.tree_map_with_path(
         lambda p, x: leaf_pspec(p, x, model_axis=model_axis), tree)
 
 
 def client_stack_pspecs(tree: Any, data_axes: tuple,
-                        *, model_axis: str = "model") -> Any:
+                        *, model_axis: str = AXIS_MODEL) -> Any:
     """Specs for client-stacked bottoms: leading axis over the data axes."""
     def one(path, leaf):
         base = leaf_pspec(path, _Shrunk(leaf), model_axis=model_axis)
@@ -122,6 +165,7 @@ class _Shrunk:
 
 
 def tree_shardings(mesh: Mesh, tree_of_pspecs: Any) -> Any:
+    validate_mesh_axes(mesh, tree_of_pspecs)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
                         is_leaf=lambda x: isinstance(x, P))
 

@@ -274,6 +274,222 @@ def test_lm_phase_two_process():
 
 
 # ---------------------------------------------------------------------------
+# LM task, model-axis sharded: 3-axis (pod x data x model) fleet parity
+# ---------------------------------------------------------------------------
+
+LM_MODEL_RIG = textwrap.dedent("""
+    import jax, numpy as np, jax.numpy as jnp
+    from dataclasses import replace
+    from repro.configs import smoke_config
+    from repro.configs.base import InputShape
+    from repro.launch.steps import (arg_shardings, input_specs, make_plan,
+                                    make_process_local_batch_put,
+                                    make_scanned_train_phase,
+                                    make_sharded_train_phase)
+    from repro.models import DistContext
+
+    cfg = replace(smoke_config("qwen3-14b"), dtype="float32")
+    cfg = replace(cfg, semisfl=replace(cfg.semisfl, queue_len=32,
+                                       confidence_threshold=0.0))
+    plan = make_plan(cfg, InputShape("train_tiny", 8, 4, "train"),
+                     n_clients=4)
+    specs = input_specs(plan)
+    rng = np.random.RandomState(0)
+
+    def realize(x):
+        if x.dtype == np.int32:
+            return rng.randint(0, max(cfg.vocab_size, 2),
+                               x.shape).astype(np.int32)
+        if x.dtype == np.bool_:
+            return np.zeros(x.shape, bool)
+        return rng.randn(*x.shape).astype(x.dtype)
+
+    state_host = jax.tree.map(realize, specs["state"])
+    # phase stacks: K=2, then the K_s-adapted K=1 retrace; the last K=2
+    # stack drives the compression-ON (int8 wire) run
+    stacks = [jax.tree.map(lambda x, k=k: np.stack(
+        [realize(x) for _ in range(k)]), specs["batch"]) for k in (2, 1, 2)]
+
+    def metrics_rows(ms):
+        return np.stack([np.asarray(ms[k]).astype(np.float64)
+                         for k in ("loss", "consistency", "clustering",
+                                   "mask_rate")], 1).tolist()
+""")
+
+LM_MODEL_SCRIPT = textwrap.dedent("""
+    import json, os
+    from repro.launch import distributed as dist
+    info = dist.initialize()
+""") + LM_MODEL_RIG + textwrap.dedent("""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.specs import replicated_sharding
+
+    assert jax.process_count() == 2 and jax.device_count() == 8
+    mesh = make_host_mesh(model=2, pods=2)    # (pod=2, data=2, model=2)
+    pod = dist.pod_index(mesh)
+    assert pod == jax.process_index()
+    sh = arg_shardings(plan, mesh, specs)
+    # the top really is committed model-parallel, and the client bottoms
+    # really do cross the process boundary
+    assert any("model" in str(s.spec)
+               for s in jax.tree.leaves(sh["state"]["top"]))
+    assert all("pod" in str(s.spec)
+               for s in jax.tree.leaves(sh["state"]["client_bottoms"]))
+
+    put = make_process_local_batch_put(plan, mesh, specs, leading_axes=1)
+    n_local = plan.n_clients // 2
+    lo, hi = pod * n_local, (pod + 1) * n_local
+    local_put = lambda st: put(jax.tree.map(lambda x: x[:, lo:hi], st))
+
+    def gather_host(state):
+        rep = jax.tree.map(lambda l: replicated_sharding(mesh, l.ndim),
+                           state)
+        full = jax.jit(lambda t: t, out_shardings=rep)(state)
+        return jax.tree.map(dist.fetch, full)
+
+    def run(wire, phase_stacks):
+        state = dist.put_from_full(state_host, sh["state"])
+        phase = make_sharded_train_phase(plan, mesh, donate_carry=False,
+                                         wire=wire)
+        rows = []
+        for st in phase_stacks:
+            state, ms = phase(state, local_put(st))
+            rows += metrics_rows({k: dist.fetch(v) for k, v in ms.items()})
+        return gather_host(state), rows
+
+    s_plain, rows_plain = run(None, stacks[:2])
+    s_wire, rows_wire = run("int8", stacks[2:])
+    out = os.environ["REPRO_TEST_OUT"]
+    if dist.is_coordinator():
+        np.savez(out + ".npz", *jax.tree.leaves(s_plain))
+        np.savez(out + "_wire.npz", *jax.tree.leaves(s_wire))
+        with open(out + ".json", "w") as f:
+            json.dump({"plain": rows_plain, "wire": rows_wire}, f)
+    dist.shutdown()
+    print("LM MODEL DIST OK")
+""")
+
+LM_MODEL_REF_SCRIPT = textwrap.dedent("""
+    import json, os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+""") + LM_MODEL_RIG + textwrap.dedent("""
+    from repro.launch.mesh import make_host_mesh
+
+    out = os.environ["REPRO_TEST_OUT"]
+    mesh = make_host_mesh(model=2, pods=2)
+    sh = arg_shardings(plan, mesh, specs)
+    put = make_process_local_batch_put(plan, mesh, specs, leading_axes=1)
+
+    def run_replicated(wire, phase_stacks):
+        phase = make_scanned_train_phase(plan, DistContext(),
+                                         donate_carry=False, wire=wire)
+        state = jax.tree.map(jnp.asarray, state_host)
+        rows = []
+        for st in phase_stacks:
+            state, ms = phase(state, jax.tree.map(jnp.asarray, st))
+            rows += metrics_rows(ms)
+        return jax.tree.map(np.asarray, state), rows
+
+    def run_sharded(wire, phase_stacks):
+        phase = make_sharded_train_phase(plan, mesh, donate_carry=False,
+                                         wire=wire)
+        state = jax.tree.map(jax.device_put, state_host, sh["state"])
+        rows = []
+        for st in phase_stacks:
+            state, ms = phase(state, put(st))
+            rows += metrics_rows(ms)
+        return jax.tree.map(np.asarray, state), rows
+
+    recs = {}
+    for tag, wire, sts in (("plain", None, stacks[:2]),
+                           ("wire", "int8", stacks[2:])):
+        s_rep, recs["rep_" + tag] = run_replicated(wire, sts)
+        s_sh, recs["sh_" + tag] = run_sharded(wire, sts)
+        np.savez(f"{out}_rep_{tag}.npz", *jax.tree.leaves(s_rep))
+        np.savez(f"{out}_sh_{tag}.npz", *jax.tree.leaves(s_sh))
+    with open(out + ".json", "w") as f:
+        json.dump(recs, f)
+
+    # the collective footprint at the cut is fixed: the compiled phase's
+    # collective-op count must not grow with N (Eq. (7) one all-reduce per
+    # psum'd quantity + the queue all-gather, however many clients ride
+    # each data shard)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.steps import make_sharded_train_step
+
+    def hlo_counts(n_clients):
+        p = make_plan(cfg, InputShape("train_tiny", 2 * n_clients, 4,
+                                      "train"), n_clients=n_clients)
+        sp = input_specs(p)
+        psh = arg_shardings(p, mesh, sp)
+        step = make_sharded_train_step(p, mesh)
+        stack_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((2,) + x.shape, x.dtype),
+            sp["batch"])
+        stack_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(None, *tuple(s.spec))),
+            psh["batch"])
+        _, mstruct = jax.eval_shape(step, sp["state"], sp["batch"])
+        m_sh = jax.tree.map(
+            lambda l: NamedSharding(mesh, P(*([None] * (l.ndim + 1)))),
+            mstruct)
+        fn = jax.jit(lambda c, xs: jax.lax.scan(step, c, xs),
+                     in_shardings=(psh["state"], stack_sh),
+                     out_shardings=(psh["state"], m_sh))
+        txt = fn.lower(sp["state"], stack_struct).compile().as_text()
+        return {k: txt.count(k) for k in
+                ("all-reduce", "all-gather", "collective-permute",
+                 "all-to-all", "reduce-scatter")}
+
+    c4, c8 = hlo_counts(4), hlo_counts(8)
+    assert c4 == c8, (c4, c8)
+    assert sum(c4.values()) > 0, c4
+    print("LM MODEL REF OK", c4)
+""")
+
+
+@pytest.mark.timeout(1800)
+def test_lm_model_sharded_two_process_parity(tmp_path):
+    """2-process x 4-device fleet with the LM top sharded on the model
+    axis == 1-process 8-device sharded == replicated-top baseline to fp32
+    rounding, over a K_s-adapted (K=2 then K=1) pair of phases and a
+    compression-ON (int8 wire) phase; the compiled phase's collective
+    count is asserted independent of N."""
+    ref_out = str(tmp_path / "ref")
+    r = subprocess.run(
+        [sys.executable, "-c", LM_MODEL_REF_SCRIPT], capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu", "REPRO_TEST_OUT": ref_out},
+        cwd=".", timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "LM MODEL REF OK" in r.stdout
+
+    dist_out = str(tmp_path / "dist")
+    results = launch_fleet(LM_MODEL_SCRIPT, num_processes=2,
+                           devices_per_process=4, timeout=600,
+                           env_extra={"REPRO_TEST_OUT": dist_out})
+    assert_fleet_ok(results, "LM MODEL DIST OK")
+
+    for tag, suffix in (("plain", ".npz"), ("wire", "_wire.npz")):
+        fleet = _load(dist_out + suffix)
+        sharded = _load(f"{ref_out}_sh_{tag}.npz")
+        replicated = _load(f"{ref_out}_rep_{tag}.npz")
+        assert _maxdiff(fleet, sharded) < 1e-5, tag
+        assert _maxdiff(fleet, replicated) < 1e-5, tag
+
+    with open(ref_out + ".json") as f:
+        ref_ms = json.load(f)
+    with open(dist_out + ".json") as f:
+        dist_ms = json.load(f)
+    for tag in ("plain", "wire"):
+        np.testing.assert_allclose(dist_ms[tag], ref_ms["sh_" + tag],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dist_ms[tag], ref_ms["rep_" + tag],
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # in-process units: bootstrap resolution + pod-view helpers
 # ---------------------------------------------------------------------------
 

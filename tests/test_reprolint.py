@@ -342,6 +342,66 @@ def test_rl006_tests_may_use_global_stream(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# RL007 PartitionSpec axis-name literals
+# ---------------------------------------------------------------------------
+
+def test_rl007_literal_axis_names_in_library_pspecs(tmp_path):
+    _write(tmp_path, "src/repro/core/phase.py", """\
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding.specs import AXIS_DATA, AXIS_MODEL
+
+        def shardings(mesh):
+            bad = P("data", "model")                     # BAD: literals
+            nested = P(("pod", "data"), None)            # BAD: in tuple
+            qualified = PartitionSpec(None, "model")     # BAD: full name
+            ok = P(AXIS_DATA, AXIS_MODEL)                # fine: constants
+            rep = P(None, None)                          # fine: no axes
+            var = AXIS_MODEL
+            ok2 = P(None, var)                           # fine: variable
+            return bad, nested, qualified, ok, rep, ok2
+
+        from jax.sharding import PartitionSpec
+        """)
+    f = _lint(tmp_path, only=["RL007"])
+    rel = "src/repro/core/phase.py"
+    assert _fires(f, rel, _line_of(tmp_path, rel, "# BAD: literals"),
+                  "RL007")
+    assert _fires(f, rel, _line_of(tmp_path, rel, "# BAD: in tuple"),
+                  "RL007")
+    assert _fires(f, rel, _line_of(tmp_path, rel, "# BAD: full name"),
+                  "RL007")
+    # one finding per literal: 2 + 2 (tuple) + 1 (qualified)
+    assert len(f) == 5
+
+
+def test_rl007_defining_modules_and_tests_exempt(tmp_path):
+    # sharding/ and launch/mesh.py DEFINE the axis vocabulary
+    _write(tmp_path, "src/repro/sharding/specs2.py", """\
+        from jax.sharding import PartitionSpec as P
+        RULE = P(None, "model")
+        """)
+    _write(tmp_path, "src/repro/launch/mesh.py", """\
+        from jax.sharding import PartitionSpec as P
+        DEFAULT = P("data", None)
+        """)
+    _write(tmp_path, "tests/test_z.py", """\
+        from jax.sharding import PartitionSpec as P
+        SPEC = P("data", "model")
+        """)
+    assert _lint(tmp_path, only=["RL007"]) == []
+
+
+def test_rl007_ignores_non_pspec_string_args(tmp_path):
+    _write(tmp_path, "src/repro/core/misc.py", """\
+        import jax
+
+        def f(x):
+            return jax.lax.psum(x, "data")   # collective, not a PartitionSpec
+        """)
+    assert _lint(tmp_path, only=["RL007"]) == []
+
+
+# ---------------------------------------------------------------------------
 # suppressions + engine behavior
 # ---------------------------------------------------------------------------
 
@@ -427,7 +487,8 @@ def test_cli_exit_codes_and_output_format(tmp_path):
 
     r4 = _cli(tmp_path, "--list-rules")
     assert r4.returncode == 0
-    for code in ["RL001", "RL002", "RL003", "RL004", "RL005", "RL006"]:
+    for code in ["RL001", "RL002", "RL003", "RL004", "RL005", "RL006",
+                 "RL007"]:
         assert code in r4.stdout
 
 

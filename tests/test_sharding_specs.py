@@ -1,0 +1,132 @@
+"""Spec-table coverage for the model-sharded LM state (DESIGN.md §3).
+
+The partition rules in ``repro.sharding.specs`` are checked against the
+ABSTRACT LM state (``input_specs`` — ShapeDtypeStructs, no compute):
+every leaf of the split state gets a rank-matched spec, every dimension a
+spec puts on the model axis is divisible by the CI mesh's model size, and
+a spec naming an axis the target mesh lacks fails fast with
+``MissingMeshAxisError`` instead of a generic NamedSharding error deep
+inside jit argument binding."""
+from dataclasses import replace
+
+import jax
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import make_mesh
+from repro.configs import smoke_config
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_client_mesh, make_host_mesh
+from repro.launch.steps import arg_shardings, input_specs, make_plan
+from repro.sharding.specs import (AXIS_DATA, AXIS_MODEL, AXIS_POD,
+                                  MissingMeshAxisError, leading_axis_pspecs,
+                                  tree_pspecs, tree_shardings,
+                                  validate_mesh_axes)
+
+# the CI parity mesh is (pod=2, data=2, model=2); every model-sharded dim
+# of the smoke LM must divide this
+CI_MODEL_SIZE = 2
+
+
+@pytest.fixture(scope="module")
+def lm_specs():
+    cfg = replace(smoke_config("qwen3-14b"), dtype="float32")
+    plan = make_plan(cfg, InputShape("train_tiny", 8, 4, "train"),
+                     n_clients=4)
+    return plan, input_specs(plan)
+
+
+def _flat_axes(spec):
+    """Flatten a PartitionSpec into (dim, axis_name) pairs."""
+    for dim, entry in enumerate(tuple(spec)):
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            yield dim, a
+
+
+def test_every_lm_state_leaf_gets_rank_matched_spec(lm_specs):
+    _, specs = lm_specs
+    for name, tree in specs["state"].items():
+        pspecs = (leading_axis_pspecs(tree, (AXIS_POD, AXIS_DATA))
+                  if "bottoms" in name else tree_pspecs(tree))
+        leaves = jax.tree.leaves(tree)
+        spec_leaves = jax.tree.leaves(pspecs,
+                                      is_leaf=lambda x: isinstance(x, P))
+        assert leaves and len(leaves) == len(spec_leaves), name
+        for leaf, spec in zip(leaves, spec_leaves):
+            assert len(tuple(spec)) == leaf.ndim, (name, leaf.shape, spec)
+
+
+def test_model_axis_dims_divide_ci_mesh(lm_specs):
+    _, specs = lm_specs
+    sharded = 0
+    for tree in specs["state"].values():
+        pspecs = tree_pspecs(tree)
+        for leaf, spec in zip(
+                jax.tree.leaves(tree),
+                jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))):
+            for dim, axis in _flat_axes(spec):
+                if axis == AXIS_MODEL:
+                    sharded += 1
+                    assert leaf.shape[dim] % CI_MODEL_SIZE == 0, \
+                        (leaf.shape, spec)
+    # the table must actually shard the top (lm_head rides the model axis)
+    assert sharded > 0
+
+
+def test_arg_shardings_commit_top_to_model_axis(lm_specs):
+    plan, specs = lm_specs
+    mesh = make_host_mesh()    # (data=1, model=1) on one CPU device
+    sh = arg_shardings(plan, mesh, specs)
+    top_specs = {tuple(s.spec) for s in jax.tree.leaves(sh["state"]["top"])}
+    assert any(axis == AXIS_MODEL for spec in top_specs
+               for _dim, axis in _flat_axes(spec))
+    # bottoms replicate over model: only the leading client axis is sharded
+    for s in jax.tree.leaves(sh["state"]["client_bottoms"]):
+        spec = tuple(s.spec)
+        assert all(e is None for e in spec[1:]), spec
+        assert isinstance(s, NamedSharding)
+
+
+def test_validate_mesh_axes_passes_and_returns_tree():
+    mesh = make_host_mesh()
+    tree = {"w": P(None, AXIS_MODEL), "b": P(AXIS_DATA)}
+    assert validate_mesh_axes(mesh, tree) is tree
+
+
+def test_missing_axis_fails_fast_with_named_error():
+    mesh = make_mesh((1,), (AXIS_DATA,))    # no model axis
+    with pytest.raises(MissingMeshAxisError, match="'model'"):
+        validate_mesh_axes(mesh, {"w": P(None, AXIS_MODEL)})
+    # tuple-of-axes entries are unpacked before checking
+    with pytest.raises(MissingMeshAxisError, match="'pod'"):
+        validate_mesh_axes(mesh, P((AXIS_POD, AXIS_DATA), None))
+    # tree_shardings goes through the same gate
+    with pytest.raises(MissingMeshAxisError, match="make_host_mesh"):
+        tree_shardings(mesh, {"w": P(AXIS_MODEL, None)})
+
+
+def test_sharded_step_rejects_expert_parallel_moe(lm_specs):
+    # EP would nest a manual (model-axis) shard_map inside the GSPMD top
+    # program — partially-manual regions with inner scans crash XLA on the
+    # pinned JAX, so the builder refuses up front
+    from repro.launch.steps import make_train_step
+    from repro.models import DistContext
+    plan, _ = lm_specs
+    mesh = make_host_mesh()
+    dist = DistContext(moe_impl="ep")
+    with pytest.raises(ValueError, match="dense"):
+        make_train_step(plan, dist, mesh=mesh)
+
+
+def test_mesh_builders_reject_oversubscription():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="cannot host"):
+        make_host_mesh(model=n + 1)
+    with pytest.raises(ValueError, match="cannot host"):
+        make_host_mesh(model=n, pods=2)
+    with pytest.raises(ValueError, match="cannot host"):
+        make_client_mesh(4, model=n + 1)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_host_mesh(model=0)

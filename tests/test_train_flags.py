@@ -99,6 +99,40 @@ def test_num_processes_implies_sharding():
     assert s.shard_clients is True
 
 
+# ---------------------------------------------------------------------------
+# --shard-model / REPRO_SHARD_MODEL
+# ---------------------------------------------------------------------------
+
+def test_shard_model_flag_env_and_default():
+    assert settings([]).shard_model == 1
+    assert settings([], {"REPRO_SHARD_MODEL": "2"}).shard_model == 2
+    # flag wins over env
+    assert settings(["--shard-model", "4"],
+                    {"REPRO_SHARD_MODEL": "2"}).shard_model == 4
+    # shard-model 1 is the replicated default: no sharding implied
+    s = settings(["--shard-model", "1"])
+    assert s.shard_model == 1 and s.shard_clients is None
+
+
+def test_shard_model_implies_client_sharding():
+    s = settings(["--shard-model", "2"])
+    assert s.shard_model == 2 and s.shard_clients is True
+    # explicit agreement is fine; composes with the fleet topology
+    s = settings(["--shard-model", "2", "--num-processes", "2"])
+    assert (s.shard_model, s.shard_clients, s.num_processes) == (2, True, 2)
+
+
+def test_shard_model_invalid_combos_fail_fast():
+    with pytest.raises(SystemExit, match="must be >= 1"):
+        settings(["--shard-model", "0"])
+    with pytest.raises(SystemExit, match="integer"):
+        settings([], {"REPRO_SHARD_MODEL": "two"})
+    with pytest.raises(SystemExit, match="model-sharded"):
+        settings(["--shard-model", "2", "--no-shard-clients"])
+    with pytest.raises(SystemExit, match="model-sharded"):
+        settings(["--shard-model", "2"], {"REPRO_SHARD_CLIENTS": "0"})
+
+
 def test_prefetch_baseline_gate():
     with pytest.raises(SystemExit, match="phase stacks"):
         settings(["--prefetch", "--baseline", "semifl"])

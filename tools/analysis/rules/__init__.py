@@ -1,8 +1,10 @@
 """Standard reprolint rule set.  Importing this package registers every
 rule into :data:`tools.analysis.engine.RULES`."""
 from tools.analysis.rules import (compat_boundary, host_sync,
-                                  namedtuple_fields, prng_discipline,
-                                  process_zero, worker_collectives)
+                                  namedtuple_fields, partition_axes,
+                                  prng_discipline, process_zero,
+                                  worker_collectives)
 
 __all__ = ["compat_boundary", "host_sync", "namedtuple_fields",
-           "prng_discipline", "process_zero", "worker_collectives"]
+           "partition_axes", "prng_discipline", "process_zero",
+           "worker_collectives"]

@@ -1,0 +1,58 @@
+"""RL007 — PartitionSpec axis names outside ``sharding/`` come from the
+named-axis constants.
+
+The mesh builders in ``repro.launch.mesh`` and the spec tables in
+``repro.sharding.specs`` agree on three axis names (``AXIS_POD``,
+``AXIS_DATA``, ``AXIS_MODEL``).  A ``P("data", "model")`` spelled with ad
+hoc string literals elsewhere in the library compiles fine until someone
+renames or re-orders a mesh axis — then it either crashes deep inside jit
+argument binding or, worse, silently shards on the wrong axis.  Library
+code must spell axis names through the constants so a rename is a
+one-line change the type of which the linter can see; only the two
+modules that DEFINE the vocabulary may use literals.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.analysis.engine import (Finding, Module, Project, Rule,
+                                   call_name, register, walk_calls)
+
+# the defining modules: the spec tables + the mesh builders
+_EXEMPT = ("src/repro/sharding/", "src/repro/launch/mesh.py")
+
+_PSPEC_CALLS = {"P", "PartitionSpec"}
+
+_HINT = ("spell mesh axis names through the named-axis constants "
+         "(repro.sharding.specs.AXIS_POD / AXIS_DATA / AXIS_MODEL) so "
+         "specs cannot drift from the mesh builders")
+
+
+@register
+class PartitionAxes(Rule):
+    code = "RL007"
+    name = "partition-axes"
+    summary = ("PartitionSpec axis names spelled as string literals "
+               "outside repro.sharding / launch.mesh")
+
+    def check_module(self, module: Module,
+                     project: Project) -> Iterable[Finding]:
+        if not module.is_library:
+            return
+        if any(e in module.relpath for e in _EXEMPT):
+            return
+        for call in walk_calls(module.tree):
+            name = call_name(call)
+            if name is None or name.split(".")[-1] not in _PSPEC_CALLS:
+                continue
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            for arg in args:
+                # literals may hide inside tuple/list args: P(("pod","data"))
+                for node in ast.walk(arg):
+                    if (isinstance(node, ast.Constant)
+                            and isinstance(node.value, str)):
+                        yield Finding(
+                            module.relpath, node.lineno, self.code,
+                            f"PartitionSpec axis {node.value!r} spelled as "
+                            f"a string literal; {_HINT}")
